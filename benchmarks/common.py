@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: CSV emission in `name,us_per_call,derived`."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def emit(self, name: str, us_per_call: float, derived: str = ""):
+        line = f"{name},{us_per_call:.3f},{derived}"
+        self.rows.append(line)
+        print(line)
+
+
+def time_us(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+# paper's 4-node MI300X testbed (section 6, Fig 11)
+TESTBED = dict(n_servers=4, m_gpus=8, b_intra=64e9, b_inter=12.5e9,
+               alpha=10e-6)

@@ -1,0 +1,28 @@
+"""Paper Fig 13: AlgoBW and phase breakdown across Zipf skew factors."""
+
+from __future__ import annotations
+
+from repro.core import ClusterSpec, simulate, skewed_workload
+
+from .common import TESTBED, Csv
+
+SKEWS = [0.8, 1.0, 1.2, 1.5, 2.0]
+
+
+def run(csv: Csv):
+    cluster = ClusterSpec(**TESTBED)
+    for s in SKEWS:
+        w = skewed_workload(cluster, 16 << 20, zipf_s=s, seed=0)
+        flash = simulate(w, "flash")
+        fan = simulate(w, "fanout")
+        spread = simulate(w, "spreadout")
+        bd = flash.breakdown
+        total = flash.completion_time
+        derived = (
+            f"algbw_gbps={flash.algbw_gbps():.2f}"
+            f"|vs_fanout={flash.algbw / fan.algbw:.1f}x"
+            f"|vs_spreadout={flash.algbw / spread.algbw:.2f}x"
+            f"|head_pct={100 * bd['head'] / total:.1f}"
+            f"|inter_pct={100 * bd['inter'] / total:.1f}"
+            f"|tail_pct={100 * bd['tail'] / total:.1f}")
+        csv.emit(f"fig13.zipf{s}", total * 1e6, derived)

@@ -1,0 +1,51 @@
+"""Paper Fig 14: MoE end-to-end training speedup, FLASH vs RCCL-fanout.
+
+Step-time model: per-iteration All-to-All times come from the alpha-beta
+simulator on MoE-gating traffic (2 dispatch + 2 combine per MoE layer, fwd
++ bwd); compute time per layer is modeled at 40% MFU on MI300X bf16
+(1.3 PFLOP/s peak).  Varies (a) expert/server count at fixed top-k, (b)
+top-k at fixed 4 servers -- the two sweeps of the figure.
+"""
+
+from __future__ import annotations
+
+from repro.core import ClusterSpec, moe_workload, simulate
+
+from .common import TESTBED, Csv
+
+D_MODEL, D_FF, N_MOE_LAYERS = 4096, 28672, 12
+TOKENS_PER_GPU = 8192
+BYTES_PER_TOKEN = D_MODEL * 2
+MI300X_FLOPS = 1.3e15 * 0.4
+
+
+def _step_time(cluster, algo: str, top_k: int, seed=0) -> float:
+    w = moe_workload(cluster, TOKENS_PER_GPU, BYTES_PER_TOKEN,
+                     top_k=top_k, seed=seed)
+    a2a = simulate(w, algo).completion_time
+    # expert FFN flops per GPU per layer (fwd 2x matmul, bwd 2x fwd)
+    tokens = TOKENS_PER_GPU * top_k
+    flops = 2 * tokens * D_MODEL * D_FF * 3 * 3
+    compute = flops / MI300X_FLOPS
+    # attention + the dense transformer layers interleaved with MoE layers
+    # (paper Fig 2: half the stack is dense) -- roughly 2x the expert flops
+    dense = 2 * compute
+    # 4 All-to-Alls per MoE layer (dispatch+combine, fwd+bwd)
+    return N_MOE_LAYERS * (compute + dense + 4 * a2a)
+
+
+def run(csv: Csv):
+    base = dict(TESTBED)
+    for n_servers in (1, 2, 4):
+        cluster = ClusterSpec(**{**base, "n_servers": n_servers})
+        flash = _step_time(cluster, "flash", top_k=2)
+        fanout = _step_time(cluster, "fanout", top_k=2)
+        csv.emit(f"fig14.experts{n_servers * 8}", flash * 1e6,
+                 f"speedup_vs_fanout={fanout / flash:.2f}x"
+                 f"|tokens_per_s={TOKENS_PER_GPU / flash:.0f}")
+    cluster = ClusterSpec(**base)
+    for k in (1, 2, 4):
+        flash = _step_time(cluster, "flash", top_k=k)
+        fanout = _step_time(cluster, "fanout", top_k=k)
+        csv.emit(f"fig14.top{k}", flash * 1e6,
+                 f"speedup_vs_fanout={fanout / flash:.2f}x")

@@ -1,0 +1,33 @@
+"""Paper Fig 15: scaling servers (8 GPUs each) and GPUs-per-server (8
+servers), 100 Gbps RoCE + 900 GB/s NVSwitch-class intra fabric."""
+
+from __future__ import annotations
+
+from repro.core import ClusterSpec, random_workload, simulate
+
+from .common import Csv
+
+HW = dict(b_intra=900e9 / 8, b_inter=12.5e9, alpha=10e-6,
+          intra_topology="switch")
+
+
+def run(csv: Csv):
+    for n in (2, 4, 8, 16, 32):
+        cluster = ClusterSpec(n_servers=n, m_gpus=8, **HW)
+        w = random_workload(cluster, 16 << 20, seed=0)
+        flash = simulate(w, "flash")
+        opt = simulate(w, "optimal")
+        mpi = simulate(w, "spreadout")
+        csv.emit(f"fig15.servers{n}", flash.completion_time * 1e6,
+                 f"algbw_gbps={flash.algbw_gbps():.2f}"
+                 f"|opt_frac={flash.algbw / opt.algbw:.3f}"
+                 f"|vs_mpi={flash.algbw / mpi.algbw:.2f}x")
+    for m in (2, 4, 8, 16):
+        cluster = ClusterSpec(n_servers=8, m_gpus=m, **HW)
+        w = random_workload(cluster, 16 << 20, seed=1)
+        flash = simulate(w, "flash")
+        opt = simulate(w, "optimal")
+        gap = 1 - flash.algbw / opt.algbw
+        csv.emit(f"fig15.gpus{m}", flash.completion_time * 1e6,
+                 f"algbw_gbps={flash.algbw_gbps():.2f}"
+                 f"|gap_pct={100 * gap:.1f}")

@@ -1,0 +1,40 @@
+"""Paper Fig 16: intra-server topology sweep + intra/inter bandwidth-ratio
+sweep (4 servers x 8 GPUs, random workload)."""
+
+from __future__ import annotations
+
+from repro.core import ClusterSpec, random_workload, simulate
+
+from .common import Csv
+
+TOPOLOGIES = {
+    "switch": 900e9 / 8,      # H100 NVSwitch per-GPU port share
+    "full_mesh": 64e9,        # MI300X xGMI per link
+    "ring": 100e9,            # MI250X-ish
+    "hybrid_cube": 25e9,      # V100 DGX-1
+}
+
+RATIOS = [(64e9, 12.5e9, "mi300x_100g"),
+          (112e9, 12.5e9, "b200ish_100g"),
+          (112e9, 50e9, "b200ish_400g"),
+          (900e9 / 8, 50e9, "h100_400g")]
+
+
+def run(csv: Csv):
+    for topo, b1 in TOPOLOGIES.items():
+        cluster = ClusterSpec(4, 8, b_intra=b1, b_inter=12.5e9,
+                              alpha=10e-6, intra_topology=topo)
+        w = random_workload(cluster, 16 << 20, seed=0)
+        flash = simulate(w, "flash")
+        opt = simulate(w, "optimal")
+        csv.emit(f"fig16.topo.{topo}", flash.completion_time * 1e6,
+                 f"opt_frac={flash.algbw / opt.algbw:.3f}")
+    for b1, b2, name in RATIOS:
+        cluster = ClusterSpec(4, 8, b_intra=b1, b_inter=b2, alpha=10e-6,
+                              intra_topology="full_mesh")
+        w = random_workload(cluster, 16 << 20, seed=0)
+        flash = simulate(w, "flash")
+        opt = simulate(w, "optimal")
+        csv.emit(f"fig16.bw.{name}", flash.completion_time * 1e6,
+                 f"ratio={b1 / b2:.1f}"
+                 f"|opt_frac={flash.algbw / opt.algbw:.3f}")

@@ -1,0 +1,90 @@
+"""Aggregate the dry-run sweep JSONs into the roofline table (section g).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and emits one
+CSV row per (arch x shape x mesh) cell plus a markdown table on request
+(consumed by EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import Csv
+
+RESULTS_DIR = os.environ.get(
+    "REPRO_DRYRUN_RESULTS",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "results", "dryrun"))
+
+
+def load_cells(results_dir: str = RESULTS_DIR):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run(csv: Csv):
+    cells = load_cells()
+    if not cells:
+        csv.emit("roofline.no_results", 0.0,
+                 f"run scripts/run_dryrun_sweep.sh first ({RESULTS_DIR})")
+        return
+    n_ok = n_skip = n_fail = 0
+    for c in cells:
+        tag = f"roofline.{c['arch']}.{c['shape']}.{c['mesh']}"
+        if c["status"] == "skipped":
+            n_skip += 1
+            csv.emit(tag, 0.0, "skipped:" + c["reason"][:60])
+            continue
+        if c["status"] != "ok":
+            n_fail += 1
+            csv.emit(tag, 0.0, "FAILED:" + c.get("error", "?")[:80])
+            continue
+        n_ok += 1
+        r = c["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        csv.emit(
+            tag, bound * 1e6,
+            f"compute_s={r['compute_s']:.4g}|memory_s={r['memory_s']:.4g}"
+            f"|collective_s={r['collective_s']:.4g}"
+            f"|dominant={r['dominant']}"
+            f"|roofline_frac={r['roofline_fraction']:.3f}"
+            f"|useful_flops={c.get('useful_flop_ratio') or 0:.3f}")
+    csv.emit("roofline.summary", 0.0,
+             f"ok={n_ok}|skipped={n_skip}|failed={n_fail}")
+
+
+def markdown_table(results_dir: str = RESULTS_DIR) -> str:
+    cells = load_cells(results_dir)
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s "
+        "| dominant | roofline frac | useful flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c["status"] == "skipped":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | -- | -- | -- "
+                f"| skipped | -- | -- |")
+            continue
+        if c["status"] != "ok":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | -- | -- | -- "
+                f"| FAILED | -- | -- |")
+            continue
+        r = c["roofline"]
+        u = c.get("useful_flop_ratio")
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.3f} | {u:.3f} |" if u else
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {r['compute_s']:.4g} | {r['memory_s']:.4g} "
+            f"| {r['collective_s']:.4g} | {r['dominant']} "
+            f"| {r['roofline_fraction']:.3f} | -- |")
+    return "\n".join(lines)

@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+  fig12  AlgoBW vs transfer size (balanced/random/skewed) vs 4 baselines
+  fig13  skew sweep + FLASH phase breakdown
+  fig14  MoE end-to-end training speedup (EP degree, top-k)
+  fig15  scale sweep (servers, GPUs/server)
+  fig16  intra-server topology + bandwidth-ratio sweep
+  fig17  scheduler synthesis time + memory overhead slope
+  roofline  per-(arch x shape x mesh) terms from the dry-run sweep
+"""
+
+from __future__ import annotations
+
+from . import (
+    fig12_algbw,
+    fig13_skew,
+    fig14_moe_e2e,
+    fig15_scale,
+    fig16_topo,
+    fig17_overhead,
+    roofline_table,
+)
+from .common import Csv
+
+
+def main() -> None:
+    csv = Csv()
+    print("name,us_per_call,derived")
+    for mod in (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
+                fig16_topo, fig17_overhead, roofline_table):
+        mod.run(csv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .checkpoint import (
+    available_steps,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["available_steps", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

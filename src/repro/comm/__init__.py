@@ -1,0 +1,25 @@
+"""jit-integrated collectives: FLASH all-to-all + gradient-sync variants."""
+
+from .all_to_all import (
+    ALL_TO_ALL_IMPLS,
+    all_to_all_by_name,
+    direct_all_to_all,
+    flash_all_to_all,
+    hierarchical_all_to_all,
+    intra_all_to_all,
+    rotation_all_to_all,
+)
+from .collectives import ef_compressed_psum, psum_bf16, tree_ef_state
+
+__all__ = [
+    "ALL_TO_ALL_IMPLS",
+    "all_to_all_by_name",
+    "direct_all_to_all",
+    "flash_all_to_all",
+    "hierarchical_all_to_all",
+    "intra_all_to_all",
+    "rotation_all_to_all",
+    "ef_compressed_psum",
+    "psum_bf16",
+    "tree_ef_state",
+]

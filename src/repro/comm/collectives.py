@@ -1,0 +1,66 @@
+"""Distributed-optimization collectives beyond the paper.
+
+* ``ef_compressed_psum`` -- int8 error-feedback gradient summation for the
+  slow (DCN) axis: quantize (grad + error carry) per-tensor to int8,
+  all_gather the int8 payload over the slow axis (P-1 small messages instead
+  of a full-precision all-reduce), de-quantize and sum locally, and keep the
+  quantization residual as next step's carry.  Cuts DCN gradient bytes 4x
+  versus f32 psum (2x vs bf16) at equal asymptotic convergence (error
+  feedback makes the compression unbiased over time).
+
+* ``psum_bf16`` -- cheap middle ground: cast-to-bf16 all-reduce.
+
+These follow the paper's design principle ("keep the slow tier maximally
+utilized, spend fast-tier/compute resources to shrink slow-tier bytes") even
+though the paper itself only schedules All-to-All.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["ef_compressed_psum", "psum_bf16", "tree_ef_state"]
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ef_compressed_psum(
+    grad: jax.Array,
+    axis_name: str,
+    error: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 gradient sum over ``axis_name``.
+
+    Call inside shard_map.  Returns (summed_grad, new_error).  The wire
+    payload over the slow axis is int8 data + one f32 scale per tensor.
+    """
+    carry = grad if error is None else grad + error
+    q, scale = _quantize_int8(carry)
+    # all_gather keeps payload int8 on the wire (a low-precision psum would
+    # be upcast by the reduction); local dequant-sum costs fast-tier flops.
+    q_all = lax.all_gather(q, axis_name)                    # [P, ...] int8
+    s_all = lax.all_gather(scale, axis_name)                # [P]
+    deq = q_all.astype(grad.dtype) * s_all.reshape(
+        (-1,) + (1,) * (q.ndim))
+    total = deq.sum(axis=0)
+    my = lax.axis_index(axis_name)
+    new_error = carry - q.astype(grad.dtype) * s_all[my]
+    return total, new_error
+
+
+def psum_bf16(grad: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce in bf16 (half the DCN bytes of f32)."""
+    return lax.psum(grad.astype(jnp.bfloat16), axis_name).astype(grad.dtype)
+
+
+def tree_ef_state(grads) -> dict:
+    """Zero-initialized error-feedback carry matching a grad pytree."""
+    return jax.tree.map(jnp.zeros_like, grads)

@@ -1,0 +1,42 @@
+"""FLASH: two-tier All-to-All scheduling (the paper's core contribution).
+
+Host-side schedule synthesis (Birkhoff decomposition over the server-level
+traffic matrix), the paper's baselines, the alpha-beta simulator used for
+every benchmark figure, and the Theorem 1-3 analytic bounds.
+"""
+
+from .birkhoff import Stage, birkhoff_decompose, max_line_sum
+from .bounds import gap_bound, t_flash_worst_case, t_optimal
+from .schedulers import FlashPlan, flash_schedule, synthesis_time
+from .simulator import ALGORITHMS, SimResult, simulate
+from .traffic import (
+    ClusterSpec,
+    Workload,
+    balanced_workload,
+    moe_workload,
+    random_workload,
+    server_reduce,
+    skewed_workload,
+)
+
+__all__ = [
+    "Stage",
+    "birkhoff_decompose",
+    "max_line_sum",
+    "gap_bound",
+    "t_flash_worst_case",
+    "t_optimal",
+    "FlashPlan",
+    "flash_schedule",
+    "synthesis_time",
+    "ALGORITHMS",
+    "SimResult",
+    "simulate",
+    "ClusterSpec",
+    "Workload",
+    "balanced_workload",
+    "moe_workload",
+    "random_workload",
+    "server_reduce",
+    "skewed_workload",
+]

@@ -1,0 +1,266 @@
+"""Birkhoff-von Neumann decomposition of a server-level traffic matrix.
+
+The heart of FLASH's inter-server stage synthesis (paper section 4.2): an
+arbitrary nonnegative n x n traffic matrix T is padded to a matrix with equal
+row and column sums ("doubly stochastic" up to scale) and decomposed into a
+sum of scaled permutation matrices
+
+    T + P = sum_k  w_k * Perm(pi_k)
+
+Each (pi_k, w_k) becomes one inter-server transfer stage in which server i
+sends exactly w_k bytes to server pi_k(i) -- one sender per receiver (incast
+free) and equal sizes within the stage (straggler free).  The classic bound
+guarantees at most n^2 - 2n + 2 stages.
+
+All of this runs on the host in NumPy: the paper's deployment (Fig 10) runs
+the scheduler on a CPU control thread per iteration, and synthesis time is one
+of the two evaluation axes.  Hopcroft-Karp perfect matching on the positive
+support keeps the whole decomposition at O(n^4.5) worst case, microseconds to
+milliseconds in practice (reproduced in benchmarks/fig17_overhead.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Stage",
+    "pad_to_doubly_balanced",
+    "hopcroft_karp",
+    "birkhoff_decompose",
+    "max_line_sum",
+]
+
+# Relative tolerance used to treat float residuals as zero.
+_EPS_REL = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One incast-free, straggler-free inter-server transfer stage.
+
+    perm[i] = j means server i sends to server j during this stage; -1 means
+    server i idles (its matched entry was pure padding).  ``size`` is the
+    stage's chunk size -- the stage lasts size/(m*B2) regardless of how much
+    *real* data each slot carries.  ``sent[i]`` is the genuine byte count
+    transferred by server i (<= size; the remainder of the slot is padding,
+    i.e. link idle time inside the stage).
+    """
+
+    perm: tuple
+    size: float
+    sent: tuple
+
+    @property
+    def active(self) -> int:
+        return sum(1 for j in self.perm if j >= 0)
+
+    @property
+    def real_bytes(self) -> float:
+        return float(sum(self.sent))
+
+    def as_matrix(self, n: int) -> np.ndarray:
+        m = np.zeros((n, n))
+        for i, j in enumerate(self.perm):
+            if j >= 0:
+                m[i, j] = self.sent[i]
+        return m
+
+
+def max_line_sum(t: np.ndarray) -> float:
+    """max(max row sum, max col sum): the quantity Birkhoff preserves and the
+    numerator of the paper's Theorem 1 optimal completion time."""
+    return float(max(t.sum(axis=1).max(), t.sum(axis=0).max()))
+
+
+def pad_to_doubly_balanced(t: np.ndarray) -> np.ndarray:
+    """Return padding P >= 0 such that T + P has all row and column sums equal
+    to max_line_sum(T).
+
+    Greedy deficit pairing: repeatedly pick a row with remaining deficit and a
+    column with remaining deficit and close the smaller of the two.  Each step
+    zeroes at least one deficit, so it terminates in <= 2n steps.  Total row
+    deficit always equals total column deficit, so both pools empty together.
+    """
+    t = np.asarray(t, dtype=np.float64)
+    n = t.shape[0]
+    if t.shape != (n, n):
+        raise ValueError(f"traffic matrix must be square, got {t.shape}")
+    if (t < 0).any():
+        raise ValueError("traffic matrix must be nonnegative")
+
+    target = max_line_sum(t)
+    pad = np.zeros_like(t)
+    row_def = target - t.sum(axis=1)
+    col_def = target - t.sum(axis=0)
+    rows = deque(i for i in range(n) if row_def[i] > 0)
+    cols = deque(j for j in range(n) if col_def[j] > 0)
+    while rows and cols:
+        i, j = rows[0], cols[0]
+        amt = min(row_def[i], col_def[j])
+        pad[i, j] += amt
+        row_def[i] -= amt
+        col_def[j] -= amt
+        if row_def[i] <= target * _EPS_REL:
+            rows.popleft()
+        if col_def[j] <= target * _EPS_REL:
+            cols.popleft()
+    return pad
+
+
+def hopcroft_karp(adj: Sequence[Sequence[int]], n_right: int) -> List[int]:
+    """Maximum bipartite matching via Hopcroft-Karp, O(E * sqrt(V)).
+
+    adj[u] lists right-vertices reachable from left-vertex u.  Returns
+    match_left where match_left[u] is the matched right vertex (or -1).
+    """
+    n_left = len(adj)
+    INF = float("inf")
+    match_l = [-1] * n_left
+    match_r = [-1] * n_right
+    dist = [0.0] * n_left
+
+    def bfs() -> bool:
+        q = deque()
+        for u in range(n_left):
+            if match_l[u] == -1:
+                dist[u] = 0
+                q.append(u)
+            else:
+                dist[u] = INF
+        found = False
+        while q:
+            u = q.popleft()
+            for v in adj[u]:
+                w = match_r[v]
+                if w == -1:
+                    found = True
+                elif dist[w] == INF:
+                    dist[w] = dist[u] + 1
+                    q.append(w)
+        return found
+
+    def dfs(u: int) -> bool:
+        for v in adj[u]:
+            w = match_r[v]
+            if w == -1 or (dist[w] == dist[u] + 1 and dfs(w)):
+                match_l[u] = v
+                match_r[v] = u
+                return True
+        dist[u] = INF
+        return False
+
+    while bfs():
+        for u in range(n_left):
+            if match_l[u] == -1:
+                dfs(u)
+    return match_l
+
+
+def birkhoff_decompose(
+    t: np.ndarray,
+    *,
+    sort_ascending: bool = True,
+    coalesce: bool = True,
+) -> List[Stage]:
+    """Decompose a nonnegative square traffic matrix into Birkhoff stages.
+
+    Args:
+      t: (n, n) nonnegative matrix of inter-server byte counts.  The diagonal
+        (intra-server traffic) must be zero -- FLASH handles it separately by
+        overlapping it with the first inter-server stage.
+      sort_ascending: execute stages in ascending size order so each stage's
+        intra-server redistribute (over B1) hides under the *next* stage's
+        inter-server transfer (over B2); see the Theorem 2 pipelining argument.
+      coalesce: merge consecutive stages that share an identical permutation
+        support (reduces stage count, whose minimization is NP-hard [20] --
+        this is the cheap 80 percent).
+
+    Returns:
+      List of Stage.  sum_k stage_k.as_matrix upper-bounds T elementwise and
+      matches it exactly on the support of T (padding shows up as idle slots,
+      perm[i] == -1, never as real traffic).
+    """
+    t = np.asarray(t, dtype=np.float64).copy()
+    n = t.shape[0]
+    if n == 0:
+        return []
+    if np.abs(np.diag(t)).max(initial=0.0) > 0:
+        raise ValueError("diagonal (intra-server) traffic must be zero")
+    total = max_line_sum(t)
+    if total <= 0:
+        return []
+    eps = total * _EPS_REL
+
+    work = t + pad_to_doubly_balanced(t)
+    real = t  # mutated alongside `work` to track genuine remaining bytes
+
+    stages: List[Stage] = []
+    # Each iteration removes at least one nonzero entry of `work`, and `work`
+    # starts with at most n^2 nonzeros: classic <= n^2 - 2n + 2 stage bound.
+    for _ in range(n * n + 2 * n):
+        if work.max() <= eps:
+            break
+        adj = [[j for j in range(n) if work[i, j] > eps] for i in range(n)]
+        match = hopcroft_karp(adj, n)
+        if any(m == -1 for m in match):
+            # Can only happen through float erosion of an almost-zero line;
+            # route remaining mass greedily and stop.
+            _greedy_drain(real, stages, eps)
+            break
+        w = min(work[i, match[i]] for i in range(n))
+        perm = []
+        sent = []
+        for i in range(n):
+            j = match[i]
+            work[i, j] -= w
+            if real[i, j] > eps:
+                amt = min(real[i, j], w)
+                real[i, j] -= amt
+                perm.append(j)
+                sent.append(float(amt))
+            else:
+                perm.append(-1)  # padding-only slot: server i idles
+                sent.append(0.0)
+        stages.append(Stage(perm=tuple(perm), size=float(w), sent=tuple(sent)))
+    else:  # pragma: no cover - loop bound is a mathematical guarantee
+        raise RuntimeError("Birkhoff decomposition failed to terminate")
+
+    if coalesce:
+        stages = _coalesce(stages)
+    if sort_ascending:
+        stages.sort(key=lambda s: s.size)
+    return stages
+
+
+def _coalesce(stages: List[Stage]) -> List[Stage]:
+    merged: dict = {}
+    order: List[tuple] = []
+    for s in stages:
+        if s.perm in merged:
+            size, sent = merged[s.perm]
+            merged[s.perm] = (size + s.size,
+                              tuple(a + b for a, b in zip(sent, s.sent)))
+        else:
+            merged[s.perm] = (s.size, s.sent)
+            order.append(s.perm)
+    return [Stage(perm=p, size=merged[p][0], sent=merged[p][1])
+            for p in order]
+
+
+def _greedy_drain(real: np.ndarray, stages: List[Stage], eps: float) -> None:
+    """Fallback for pathological float residue: one stage per remaining entry."""
+    n = real.shape[0]
+    idx = np.argwhere(real > eps)
+    for i, j in idx:
+        perm = [-1] * n
+        sent = [0.0] * n
+        perm[int(i)] = int(j)
+        sent[int(i)] = float(real[i, j])
+        stages.append(Stage(perm=tuple(perm), size=float(real[i, j]),
+                            sent=tuple(sent)))
+        real[i, j] = 0.0

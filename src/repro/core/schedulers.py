@@ -1,0 +1,174 @@
+"""All-to-All schedulers: FLASH and the paper's baselines.
+
+Every scheduler consumes a GPU-level ``Workload`` and produces a ``Plan`` that
+the alpha-beta simulator (simulator.py) can time.  ``flash_schedule`` is the
+paper's contribution: the three-phase, two-tier schedule whose inter-server
+stage list comes from the Birkhoff decomposition of the server-level matrix.
+
+Baselines (paper section 6.1):
+  * FanOut     -- RCCL default: every GPU transmits to all peers at once.
+  * SpreadOut  -- MPI: N-1 barrier-synchronized stages, stage k pairs
+                  g -> (g + k) mod N.
+  * Hierarchical -- MSCCL-style rail-aligned: GPU i of each server aggregates
+                  local traffic for rail-i peers, then ships it over NIC i.
+  * LP bound   -- Theorem 1 optimal completion time (not executable, used as
+                  the 'optimal' line in every figure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from .birkhoff import Stage, birkhoff_decompose, max_line_sum
+from .traffic import ClusterSpec, Workload, server_reduce
+
+__all__ = [
+    "FlashPlan",
+    "flash_schedule",
+    "spreadout_stages",
+    "hierarchical_nic_loads",
+    "synthesis_time",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashPlan:
+    """Output of FLASH schedule synthesis for one traffic matrix.
+
+    Attributes:
+      stages: Birkhoff stages over the *server-level* matrix, ascending size
+        (paper 4.3: ascending order lets stage k's redistribute hide under
+        stage k+1's inter-server transfer).
+      lb_moved_per_gpu: (n_servers, m) bytes each GPU must shed during the
+        load-balance phase (max over destinations handled concurrently).
+      redistribute_tail: bytes/GPU redistributed after the *last* stage (the
+        un-hidden pipeline tail).
+      intra_bytes: S_i per server, overlapped with the first inter stage.
+      synth_seconds: wall-clock time spent computing this plan (the paper's
+        'scheduling time' metric, Fig 17a).
+    """
+
+    cluster: ClusterSpec
+    stages: List[Stage]
+    lb_moved_per_gpu: np.ndarray
+    redistribute_tail: float
+    intra_bytes: np.ndarray
+    synth_seconds: float
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def inter_bytes(self) -> float:
+        """Genuine bytes crossing the inter-server network."""
+        return float(sum(s.real_bytes for s in self.stages))
+
+    def stage_sizes(self) -> np.ndarray:
+        return np.array([s.size for s in self.stages])
+
+
+def flash_schedule(w: Workload) -> FlashPlan:
+    """Synthesize the complete FLASH plan for a workload.
+
+    This is the code path whose latency the paper reports as ~15-32 us on
+    small clusters; it is pure NumPy + Hopcroft-Karp and runs per iteration
+    on the host control thread (paper Fig 10).
+    """
+    t0 = time.perf_counter()
+    cluster = w.cluster
+    n, m = cluster.n_servers, cluster.m_gpus
+    t_server, s_intra = server_reduce(w.matrix, m)
+
+    # Load-balance phase: per (server, gpu), how many bytes must this GPU
+    # shed so that every local GPU holds exactly T[a, j] / m for every dest j?
+    per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
+    target = t_server / m  # (n, n); diagonal 0
+    excess = np.maximum(per_gpu_dest - target[:, None, :], 0.0)
+    for a in range(n):
+        excess[a, :, a] = 0.0  # intra-server traffic is not load balanced
+    lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
+
+    stages = birkhoff_decompose(t_server, sort_ascending=True, coalesce=True)
+    tail = stages[-1].size / m if stages else 0.0
+    synth = time.perf_counter() - t0
+    return FlashPlan(
+        cluster=cluster,
+        stages=stages,
+        lb_moved_per_gpu=lb_moved,
+        redistribute_tail=tail,
+        intra_bytes=s_intra,
+        synth_seconds=synth,
+    )
+
+
+def spreadout_stages(w: Workload) -> List[np.ndarray]:
+    """SpreadOut: stage k (k = 1..N-1) pairs GPU g with GPU (g + k) mod N.
+
+    Returns per-stage (N,) arrays of flow sizes; flow g in stage k goes
+    g -> (g + k) mod N.
+    """
+    n_gpus = w.cluster.n_gpus
+    out = []
+    for k in range(1, n_gpus):
+        sizes = np.array(
+            [w.matrix[g, (g + k) % n_gpus] for g in range(n_gpus)])
+        out.append(sizes)
+    return out
+
+
+def hierarchical_nic_loads(w: Workload):
+    """MSCCL-style rail-aligned aggregation: per-NIC send/recv byte loads.
+
+    GPU i of server a aggregates (intra-server gather) all local bytes whose
+    destination is GPU i of any remote server, then ships them over NIC i to
+    the rail peer.  Returns (send_loads, recv_loads, gather_bytes) each of
+    shape (n_servers, m).
+    """
+    c = w.cluster
+    n, m = c.n_servers, c.m_gpus
+    blk = w.matrix.reshape(n, m, n, m)  # [a, g, b, h]
+    send = np.zeros((n, m))
+    recv = np.zeros((n, m))
+    gather = np.zeros((n, m))
+    for a in range(n):
+        for i in range(m):
+            inter = blk[a, :, :, i].sum() - blk[a, :, a, i].sum()
+            send[a, i] = inter
+            own = blk[a, i, :, i].sum() - blk[a, i, a, i]
+            gather[a, i] = inter - own  # bytes arriving from local peers
+    for b in range(n):
+        for i in range(m):
+            recv[b, i] = blk[:, :, b, i].sum() - blk[b, :, b, i].sum()
+    return send, recv, gather
+
+
+def synthesis_time(
+    n_servers: int,
+    m_gpus: int = 8,
+    seed: int = 0,
+    workload: Optional[Workload] = None,
+) -> float:
+    """Measure FLASH schedule-synthesis wall time for a random workload.
+
+    Used by benchmarks/fig17_overhead.py to reproduce the scheduling-time
+    claim (us-scale vs TACCL's minutes-to-hours).
+    """
+    from .traffic import random_workload
+
+    if workload is None:
+        cluster = ClusterSpec(n_servers=n_servers, m_gpus=m_gpus)
+        workload = random_workload(cluster, mean_size=1 << 20, seed=seed)
+    plan = flash_schedule(workload)
+    return plan.synth_seconds
+
+
+def optimal_completion_time(w: Workload) -> float:
+    """Theorem 1: max line sum of the server matrix over aggregate NIC bw."""
+    c = w.cluster
+    t_server = w.server_matrix()
+    return max_line_sum(t_server) / (c.m_gpus * c.b_inter)

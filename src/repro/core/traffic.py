@@ -1,0 +1,212 @@
+"""Traffic-matrix abstractions and workload generators.
+
+A GPU-level All-to-All workload on a cluster of n servers x m GPUs is an
+(n*m, n*m) nonnegative matrix ``W`` where ``W[g, h]`` is the number of bytes
+GPU g must deliver to GPU h.  FLASH's load-balance step collapses it to a
+server-level (n, n) matrix T plus per-server intra traffic S_i (paper
+section 4.3): after balancing, every one of the m GPUs of server a carries
+exactly T[a, b] / m bytes for server b.
+
+Generators mirror the paper's evaluation workloads (section 6): balanced,
+random (uniform), skewed (Zipf), plus an MoE-gating generator reproducing the
+Megatron-LM measurement methodology of Fig 4 (top-k routing with a skewed
+expert-popularity prior, traffic matrix changing every iteration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "ClusterSpec",
+    "Workload",
+    "balanced_workload",
+    "random_workload",
+    "skewed_workload",
+    "moe_workload",
+    "server_reduce",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Two-tier cluster model (paper Fig 6).
+
+    Bandwidths are bytes/second *per link*: ``b_intra`` for one intra-server
+    link (NVLink / xGMI / ICI) and ``b_inter`` for one GPU's NIC (uplink =
+    downlink = b_inter, assumption (1) in section 3).  ``alpha`` is the static
+    per-stage wakeup latency of the alpha-beta model (section 6.3).
+    """
+
+    n_servers: int
+    m_gpus: int
+    b_intra: float = 64e9  # 64 GB/s per Infinity Fabric link (MI300X testbed)
+    b_inter: float = 12.5e9  # 100 Gbps NIC
+    alpha: float = 10e-6
+    intra_topology: str = "full_mesh"  # full_mesh | switch | ring | hybrid_cube
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_servers * self.m_gpus
+
+    @property
+    def bw_ratio(self) -> float:
+        return self.b_intra / self.b_inter
+
+    def intra_path_bandwidth(self) -> float:
+        """Effective single-path intra-server bandwidth under the topology.
+
+        full_mesh / switch: a pairwise transfer rides one dedicated link.
+        ring: average path crosses m/4 hops sharing the ring -> ~4/m of a link.
+        hybrid_cube (DGX-1 style): ~half of full-mesh efficiency.
+        These coarse factors reproduce the ordering of paper Fig 16a.
+        """
+        if self.intra_topology in ("full_mesh", "switch"):
+            return self.b_intra
+        if self.intra_topology == "ring":
+            return self.b_intra * 4.0 / max(self.m_gpus, 4)
+        if self.intra_topology == "hybrid_cube":
+            return self.b_intra * 0.5
+        raise ValueError(f"unknown intra topology {self.intra_topology!r}")
+
+    def intra_a2a_bandwidth(self) -> float:
+        """Aggregate per-GPU bandwidth during an intra-server All-to-All.
+
+        Coarse per-topology efficiency factors, calibrated to reproduce the
+        paper's Fig 16a ordering (switch/full-mesh near-optimal; ring and
+        hybrid-cube at 0.86-0.92x due to multi-hop shuffles).
+        """
+        if self.intra_topology in ("full_mesh",):
+            return self.b_intra * max(self.m_gpus - 1, 1)
+        if self.intra_topology == "switch":
+            return self.b_intra  # switch port caps a GPU at one link rate
+        if self.intra_topology == "ring":
+            # two directions, average path m/4 hops sharing ring capacity
+            return self.b_intra * 2 * 4.0 / max(self.m_gpus, 4)
+        if self.intra_topology == "hybrid_cube":
+            # 4 links/GPU, ~half usable bisection for an A2A shuffle
+            return self.b_intra * 2
+        raise ValueError(f"unknown intra topology {self.intra_topology!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """GPU-level traffic matrix plus the cluster it runs on."""
+
+    cluster: ClusterSpec
+    matrix: np.ndarray  # (n_gpus, n_gpus), zero diagonal
+
+    def __post_init__(self):
+        n = self.cluster.n_gpus
+        if self.matrix.shape != (n, n):
+            raise ValueError(
+                f"matrix shape {self.matrix.shape} != ({n}, {n})")
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.matrix.sum())
+
+    def server_matrix(self) -> np.ndarray:
+        """(n, n) inter-server byte matrix T with zero diagonal."""
+        t, _ = server_reduce(self.matrix, self.cluster.m_gpus)
+        return t
+
+    def intra_bytes(self) -> np.ndarray:
+        """S_i: bytes that stay inside each server."""
+        _, s = server_reduce(self.matrix, self.cluster.m_gpus)
+        return s
+
+
+def server_reduce(w: np.ndarray, m: int):
+    """Collapse a GPU-level matrix to (server-level T, intra byte vector S)."""
+    n_gpus = w.shape[0]
+    n = n_gpus // m
+    blocks = w.reshape(n, m, n, m).sum(axis=(1, 3))  # (n, n) incl. diagonal
+    s = np.diag(blocks).copy()
+    t = blocks.copy()
+    np.fill_diagonal(t, 0.0)
+    return t, s
+
+
+def _zero_diag(w: np.ndarray) -> np.ndarray:
+    np.fill_diagonal(w, 0.0)
+    return w
+
+
+def balanced_workload(cluster: ClusterSpec, size_per_pair: float) -> Workload:
+    """Every GPU sends `size_per_pair` bytes to every other GPU."""
+    n = cluster.n_gpus
+    w = np.full((n, n), float(size_per_pair))
+    return Workload(cluster, _zero_diag(w))
+
+
+def random_workload(
+    cluster: ClusterSpec, mean_size: float, seed: int = 0
+) -> Workload:
+    """Pairwise sizes ~ Uniform[0, 2 * mean] (paper 'Random')."""
+    rng = np.random.default_rng(seed)
+    n = cluster.n_gpus
+    w = rng.uniform(0.0, 2.0 * mean_size, size=(n, n))
+    return Workload(cluster, _zero_diag(w))
+
+
+def skewed_workload(
+    cluster: ClusterSpec,
+    mean_size: float,
+    zipf_s: float = 1.2,
+    seed: int = 0,
+) -> Workload:
+    """Pairwise sizes follow a Zipf-ranked distribution (paper 'Skewed').
+
+    Ranks are randomly assigned to (src, dst) pairs; sizes are rescaled so the
+    total equals the balanced workload's total, making AlgoBW comparable
+    across skew factors (as in Fig 13).
+    """
+    rng = np.random.default_rng(seed)
+    n = cluster.n_gpus
+    n_pairs = n * (n - 1)
+    ranks = np.arange(1, n_pairs + 1, dtype=np.float64)
+    sizes = ranks ** (-zipf_s)
+    sizes *= (mean_size * n_pairs) / sizes.sum()
+    rng.shuffle(sizes)
+    w = np.zeros((n, n))
+    idx = [(i, j) for i in range(n) for j in range(n) if i != j]
+    for (i, j), v in zip(idx, sizes):
+        w[i, j] = v
+    return Workload(cluster, w)
+
+
+def moe_workload(
+    cluster: ClusterSpec,
+    tokens_per_gpu: int,
+    bytes_per_token: int,
+    top_k: int = 2,
+    expert_skew: float = 0.6,
+    seed: int = 0,
+    n_experts: Optional[int] = None,
+) -> Workload:
+    """All-to-All dispatch matrix induced by top-k MoE gating.
+
+    Each GPU hosts one expert (DeepSeek-style, paper section 6.2) unless
+    ``n_experts`` says otherwise.  Expert popularity follows a Dirichlet prior
+    with concentration ``expert_skew`` (smaller = more skew), reproducing the
+    measured 12.5x p90/median skew of Fig 4a at the defaults.
+    """
+    rng = np.random.default_rng(seed)
+    n = cluster.n_gpus
+    e = n_experts or n
+    popularity = rng.dirichlet(np.full(e, expert_skew))
+    w = np.zeros((n, n))
+    for src in range(n):
+        # Multinomial token split across top-k draws from the popularity prior.
+        counts = np.zeros(e)
+        for _ in range(top_k):
+            counts += rng.multinomial(tokens_per_gpu, popularity)
+        for expert, c in enumerate(counts):
+            dst = expert % n
+            if dst != src and c > 0:
+                w[src, dst] += c * bytes_per_token
+    return Workload(cluster, w)

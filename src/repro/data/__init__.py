@@ -1,0 +1,3 @@
+from .synthetic import DataConfig, SyntheticLM
+
+__all__ = ["DataConfig", "SyntheticLM"]

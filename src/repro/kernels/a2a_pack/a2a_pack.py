@@ -1,0 +1,54 @@
+"""Destination-contiguous token packing Pallas kernel (paper section 5 (2)).
+
+FLASH's implementation note: "bundle the data having the same destination
+... eliminating data fragmentation and allowing for consecutive memory
+reads."  On TPU the analogue is packing routed token rows into
+destination-contiguous order *before* the dispatch All-to-All so every
+ppermute chunk is one contiguous HBM stream (and the 128-lane tiles stay
+dense).
+
+The kernel is a row gather driven from scalar-prefetch memory: the index
+vector rides in SMEM ahead of the grid, and each grid step's *input*
+BlockSpec index_map dereferences it -- so the DMA engine fetches exactly the
+source row each output slot needs (a data-dependent DMA schedule, no
+gather lowering in XLA).  Row blocks of 8 keep the (8, 128) sublane tile
+dense; D must be a multiple of 128.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(idx_ref, x_ref, o_ref):
+    del idx_ref  # consumed by the index map
+    o_ref[...] = x_ref[...]
+
+
+def a2a_pack(
+    x: jax.Array,          # [N, D] token rows
+    idx: jax.Array,        # [M] int32: output row m <- x[idx[m]]
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    n, d = x.shape
+    m = idx.shape[0]
+
+    return pl.pallas_call(
+        _pack_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), x)

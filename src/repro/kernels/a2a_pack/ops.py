@@ -1,0 +1,17 @@
+"""jit'd public wrapper for a2a_pack."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .a2a_pack import a2a_pack
+from .ref import a2a_pack_ref
+
+__all__ = ["a2a_pack_op", "a2a_pack_ref"]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def a2a_pack_op(x, idx, *, interpret: bool = False) -> jax.Array:
+    return a2a_pack(x, idx, interpret=interpret)

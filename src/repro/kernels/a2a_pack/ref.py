@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for a2a_pack."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def a2a_pack_ref(x, idx):
+    """out[m] = x[idx[m]]."""
+    return jnp.take(x, idx, axis=0)

@@ -1,0 +1,3 @@
+from .ops import attention_ref, flash_attention_op
+
+__all__ = ["attention_ref", "flash_attention_op"]

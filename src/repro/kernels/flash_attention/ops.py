@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the flash_attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention_op", "attention_ref"]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       window: Optional[int] = None, block_q: int = 128,
+                       block_k: int = 128,
+                       interpret: bool = False) -> jax.Array:
+    """Blockwise attention; q [B,H,S,D], k/v [B,K,S,D] -> [B,H,S,D].
+
+    On CPU callers must pass interpret=True (the kernel body then executes
+    as pure JAX ops); on TPU the Mosaic-compiled kernel runs with the
+    BlockSpec VMEM tiling declared in flash_attention.py.
+    """
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k,
+                           interpret=interpret)

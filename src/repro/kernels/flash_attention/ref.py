@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash_attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B, H, S, D]; k/v: [B, K, S, D] (GQA repeat here)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    rep = h // kv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

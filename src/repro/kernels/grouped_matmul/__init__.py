@@ -1,0 +1,3 @@
+from .ops import grouped_matmul_op, grouped_matmul_ref
+
+__all__ = ["grouped_matmul_op", "grouped_matmul_ref"]

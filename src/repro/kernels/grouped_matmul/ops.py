@@ -1,0 +1,21 @@
+"""jit'd public wrapper for grouped_matmul."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .grouped_matmul import grouped_matmul
+from .ref import grouped_matmul_ref
+
+__all__ = ["grouped_matmul_op", "grouped_matmul_ref"]
+
+
+@partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                   "interpret"))
+def grouped_matmul_op(x, w, counts=None, *, block_c: int = 128,
+                      block_d: int = 512, block_f: int = 128,
+                      interpret: bool = False) -> jax.Array:
+    return grouped_matmul(x, w, counts, block_c=block_c, block_d=block_d,
+                          block_f=block_f, interpret=interpret)

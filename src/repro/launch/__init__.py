@@ -1,0 +1,9 @@
+"""Launcher surface: mesh construction, sharding rules, dry-run, drivers.
+
+NOTE: do not import ``dryrun`` from here -- importing it sets XLA_FLAGS for
+512 host devices, which must only happen in a dedicated process.
+"""
+
+from .mesh import dp_axes, make_mesh, make_production_mesh, slow_axis
+
+__all__ = ["dp_axes", "make_mesh", "make_production_mesh", "slow_axis"]

@@ -1,0 +1,197 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_chip / HBM_bw              [s]
+    collective = collective_bytes_per_chip / link_bw      [s]
+
+``cost_analysis`` of the SPMD-partitioned executable reports the
+*per-device* program, so terms divide by per-chip peaks directly.
+Collective bytes are not in cost_analysis: we parse the optimized HLO and
+sum sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with two refinements beyond the assignment's floor:
+
+  * wire-byte factors per op (ring all-reduce moves ~2x its operand, an
+    all-to-all moves (n-1)/n of it, a permute moves 1x), and
+  * a two-tier split: replica groups that span pods (device ids crossing a
+    256-chip boundary on the pod-major mesh) are DCN collectives -- the
+    paper's slow tier -- reported separately from ICI collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+# TPU v5e per-chip constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (assignment constant)
+DCN_BW = 25e9                # bytes/s per chip across pods (refined tier)
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    link_bw: float = LINK_BW
+    dcn_bw: float = DCN_BW
+
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.*?)\}\}?,?")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+# per-op wire multiplier applied to the *result* bytes, group size n
+def _wire_bytes(op: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "all-gather":
+        return result_bytes * (n - 1) / n        # result is gathered size
+    if op == "reduce-scatter":
+        return result_bytes * (n - 1)            # result is scattered shard
+    if op == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _iota_groups(g: int, s: int, dims: List[int],
+                 perm: Optional[List[int]]) -> np.ndarray:
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if perm:
+        ids = ids.transpose(perm)
+    return ids.reshape(g, s)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    simple_bytes: float = 0.0       # assignment floor: sum of op sizes
+    wire_bytes: float = 0.0         # ring/permute-aware per-chip estimate
+    ici_bytes: float = 0.0          # wire bytes on intra-pod groups
+    dcn_bytes: float = 0.0          # wire bytes on pod-crossing groups
+    by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+_PROMOTED_RE = re.compile(r"to_apply=%\S*promoted")
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # count start ops once
+        rb = _shape_bytes(shape_str)
+        # The CPU backend promotes bf16 reductions to f32 on the wire
+        # (to_apply=%add.clone_promoted); a TPU keeps them bf16.  Halve the
+        # bytes of promoted reductions so terms reflect the TPU target.
+        if _PROMOTED_RE.search(line):
+            rb *= 0.5
+        n, crosses = _group_info(line, pod_size)
+        wb = _wire_bytes(op, rb, n)
+        stats.simple_bytes += rb
+        stats.wire_bytes += wb
+        stats.by_op[op] = stats.by_op.get(op, 0.0) + wb
+        if crosses:
+            stats.dcn_bytes += wb
+        else:
+            stats.ici_bytes += wb
+        stats.count += 1
+    return stats
+
+
+def _group_info(line: str, pod_size: int) -> Tuple[int, bool]:
+    """(group size, does any group cross a pod boundary)."""
+    mi = _GROUPS_IOTA_RE.search(line)
+    if mi:
+        g, s = int(mi.group(1)), int(mi.group(2))
+        dims = [int(x) for x in mi.group(3).split(",")]
+        perm = [int(x) for x in mi.group(4).split(",")] if mi.group(4) \
+            else None
+        groups = _iota_groups(g, s, dims, perm)
+        crosses = bool(((groups // pod_size).max(axis=1)
+                        != (groups // pod_size).min(axis=1)).any())
+        return s, crosses
+    ml = _GROUPS_LIST_RE.search(line)
+    if ml:
+        body = ml.group(1)
+        sizes, crosses = [], False
+        for grp in body.split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "")
+                   .split(",") if x.strip()]
+            if not ids:
+                continue
+            sizes.append(len(ids))
+            pods = {i // pod_size for i in ids}
+            crosses |= len(pods) > 1
+        return (max(sizes) if sizes else 1), crosses
+    mp = _PERMUTE_PAIRS_RE.search(line)
+    if mp:
+        pairs = re.findall(r"\{(\d+),(\d+)\}", "{" + mp.group(1) + "}")
+        crosses = any(int(a) // pod_size != int(b) // pod_size
+                      for a, b in pairs)
+        return 2, crosses
+    return 1, False
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll: CollectiveStats, hw: HW = HW()) -> Dict[str, float]:
+    compute = flops_per_chip / hw.peak_flops
+    memory = bytes_per_chip / hw.hbm_bw
+    collective_simple = coll.simple_bytes / hw.link_bw
+    collective = coll.ici_bytes / hw.link_bw + coll.dcn_bytes / hw.dcn_bw
+    dominant = max(
+        [("compute", compute), ("memory", memory),
+         ("collective", collective)], key=lambda kv: kv[1])[0]
+    bound = max(compute, memory, collective)
+    frac = compute / bound if bound > 0 else 0.0
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "collective_simple_s": collective_simple,
+        "ici_bytes": coll.ici_bytes,
+        "dcn_bytes": coll.dcn_bytes,
+        "dominant": dominant,
+        "roofline_fraction": frac,   # compute term / binding term
+    }

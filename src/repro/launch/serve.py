@@ -1,0 +1,109 @@
+"""Serving-step construction + a batched-request demo server.
+
+``make_serve_step`` builds the jit'd one-token decode step against a KV
+cache / recurrent state for a shape cell; ``make_prefill_step`` builds the
+prompt pass.  Run directly for a CPU-scale batched-serving demo:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ModelConfig, get_config, smoke_config
+from ..models import build_model, use_mesh_rules
+from .shardings import batch_shardings, cache_shardings, param_shardings
+from .train import make_dist_context, make_rules
+
+__all__ = ["make_serve_step", "make_prefill_step", "serve_state_shapes"]
+
+
+def serve_state_shapes(cfg: ModelConfig, mesh: Optional[Mesh],
+                       batch: int, seq_len: int):
+    """(params_shape, params_sh, cache_shape, cache_sh) -- no allocation."""
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(batch, seq_len))
+    if mesh is None:
+        return params_shape, None, cache_shape, None
+    return (params_shape, param_shardings(cfg, mesh, params_shape),
+            cache_shape, cache_shardings(cfg, mesh, cache_shape))
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    """jit'd (params, cache, tokens [B], pos) -> (logits [B, V], cache)."""
+    model = build_model(cfg)
+    dist = make_dist_context(cfg, mesh) if mesh is not None else None
+    rules = make_rules(cfg, mesh) if mesh is not None else None
+
+    def serve_step(params, cache, tokens, pos):
+        with use_mesh_rules(rules):
+            return model.decode_step(params, cache, tokens, pos, dist)
+
+    if mesh is None:
+        return jax.jit(serve_step)
+    return jax.jit(serve_step, donate_argnums=(1,))
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    """jit'd (params, batch) -> (logits, cache | aux)."""
+    model = build_model(cfg)
+    dist = make_dist_context(cfg, mesh) if mesh is not None else None
+    rules = make_rules(cfg, mesh) if mesh is not None else None
+
+    def prefill_step(params, batch):
+        with use_mesh_rules(rules):
+            return model.prefill(params, batch, dist)
+
+    return jax.jit(prefill_step)
+
+
+# -- CPU-scale batched-serving demo ------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    total = args.prompt_len + args.gen_len
+
+    from ..models.transformer import lm_prefill
+    t0 = time.perf_counter()
+    logits, cache = lm_prefill(cfg, params, jnp.asarray(prompts),
+                               cache_len=total)
+    toks = jnp.argmax(logits, -1)
+    step = make_serve_step(cfg, mesh=None)
+    out = [toks]
+    for t in range(args.prompt_len, total - 1):
+        logits, cache = step(params, cache, toks, jnp.int32(t))
+        toks = jnp.argmax(logits, -1)
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    gen = np.stack([np.asarray(t) for t in out], axis=1)
+    tput = args.batch * gen.shape[1] / dt
+    print(f"arch={cfg.name} batch={args.batch} generated={gen.shape[1]} "
+          f"tokens/req; {tput:.1f} tok/s total")
+    print("sample:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo: composable JAX model definitions for all assigned archs."""
+
+from .dist import DistContext, choose_ep_axes
+from .model import Model, build_model, input_specs
+from .sharding import MeshRules, logical_constraint, use_mesh_rules
+
+__all__ = [
+    "DistContext",
+    "choose_ep_axes",
+    "Model",
+    "build_model",
+    "input_specs",
+    "MeshRules",
+    "logical_constraint",
+    "use_mesh_rules",
+]

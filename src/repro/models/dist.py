@@ -1,0 +1,62 @@
+"""Distribution context: which mesh axes play which role for a given run.
+
+``DistContext`` is threaded through model code (None => single-device
+reference semantics, used by CPU smoke tests and as the correctness oracle
+for the distributed path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from jax.sharding import Mesh
+
+from ..configs.registry import ModelConfig
+
+__all__ = ["DistContext", "choose_ep_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]            # batch-sharded axes (manual in MoE island)
+    slow_axis: Optional[str]            # inter-pod DCN axis ("pod"), if present
+    ep_axes: Optional[Tuple[str, ...]]  # expert-parallel axes, slow-major
+    a2a_impl: str = "flash"             # flash | direct | hierarchical
+
+    @property
+    def ep_size(self) -> int:
+        if not self.ep_axes:
+            return 1
+        shape = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        size = 1
+        for a in self.ep_axes:
+            size *= shape[a]
+        return size
+
+
+def choose_ep_axes(cfg: ModelConfig, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Pick EP axes for an arch on a mesh: the largest slow-major prefix of
+    the DP axes whose size divides num_experts.
+
+    Priority (production mesh pod=2, data=16):
+      E % (pod*data) == 0 -> ("pod", "data")   # megatron-moe-32e: full DCN case
+      E % data == 0       -> ("data",)         # dbrx-16e: ICI-only dispatch
+      E % pod == 0        -> ("pod",)          # mixtral-8e: DCN dispatch
+      otherwise           -> None              # TP-only MoE (experts replicated)
+    """
+    if cfg.moe is None:
+        return None
+    shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    e = cfg.moe.num_experts
+    has_pod = "pod" in shape
+    pod = shape.get("pod", 1)
+    data = shape.get("data", 1)
+    if has_pod and e % (pod * data) == 0:
+        return ("pod", "data")
+    if e % data == 0 and data > 1:
+        return ("data",)
+    if has_pod and e % pod == 0 and pod > 1:
+        return ("pod",)
+    return None

@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules (MaxText-style) for the model zoo.
+
+Model code annotates tensors with *logical* axis names; a ``MeshRules``
+binding maps those to physical mesh axes at lowering time.  On a single
+device (CPU smoke tests) no rules are bound and every annotation is a no-op,
+so the same model code runs everywhere.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshRules",
+    "use_mesh_rules",
+    "current_rules",
+    "logical_constraint",
+    "logical_spec",
+    "DEFAULT_RULES",
+]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical name -> physical mesh axis (or None = replicate)."""
+
+    mesh: Mesh
+    batch: Axis = ("pod", "data")
+    seq: Axis = None              # sequence usually unsharded...
+    act_seq: Axis = None          # ...activation seq dim (SP flips to "model")
+    model_dim: Axis = None
+    heads: Axis = "model"
+    kv_heads: Axis = "model"
+    head_dim: Axis = None
+    ff: Axis = "model"
+    vocab: Axis = "model"
+    experts: Axis = None          # EP axes; chosen per arch by choose_ep_axes
+    expert_ff: Axis = "model"
+    layers: Axis = None
+    kv_feature: Axis = "model"    # fused K*dh feature dim of the KV cache
+
+    def spec(self, *names: Optional[str]) -> P:
+        """Logical names -> PartitionSpec, deduplicating mesh axes.
+
+        With sequence sharding (act_seq="model") an intermediate like the
+        FFN hidden ("batch", "act_seq", "ff") would map "model" twice;
+        the RIGHT-most (innermost) use wins and earlier dims replicate --
+        i.e. tensors contracted over a TP-sharded dim are gathered over
+        seq for that op, the standard SP dataflow.
+        """
+        entries = []
+        for n in names:
+            entries.append(None if n is None else getattr(self, n))
+        used: set = set()
+        out = []
+        for e in reversed(entries):
+            axes = () if e is None else ((e,) if isinstance(e, str) else e)
+            if any(a in used for a in axes):
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(e)
+        return P(*reversed(out))
+
+    def sharding(self, *names: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*names))
+
+
+DEFAULT_RULES = None  # bound per-run via use_mesh_rules
+
+_ACTIVE: contextvars.ContextVar[Optional[MeshRules]] = contextvars.ContextVar(
+    "repro_mesh_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(rules: Optional[MeshRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[MeshRules]:
+    return _ACTIVE.get()
+
+
+def logical_spec(*names: Optional[str]) -> Optional[P]:
+    rules = current_rules()
+    return rules.spec(*names) if rules is not None else None
+
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without bound rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, rules.spec(*names)))

@@ -1,0 +1,292 @@
+"""Recurrent blocks: xLSTM's mLSTM/sLSTM and Hymba's Mamba (selective SSM).
+
+Training uses a ``lax.scan`` over time (sequential form).  A chunkwise-
+parallel form would be faster wall-clock on TPU but has identical FLOP
+structure; the dry-run/roofline numbers are unaffected (noted in DESIGN.md).
+Decode reuses the same step functions with a carried state -- O(1) memory
+per token, which is what makes xlstm/hymba ``long_500k``-capable.
+
+All states are stabilized with the max-trick (m state) as in the xLSTM
+paper, computed in f32.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ModelConfig
+from .layers import dense_init
+
+__all__ = [
+    "init_mlstm", "mlstm_apply", "mlstm_decode", "mlstm_zero_state",
+    "init_slstm", "slstm_apply", "slstm_decode", "slstm_zero_state",
+    "init_mamba", "mamba_apply", "mamba_decode", "mamba_zero_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, parallelizable linear-attention-like recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wif": dense_init(ks[3], d, 2 * h, dtype),
+        "wz": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+    }
+
+
+def mlstm_zero_state(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(state, inputs):
+    """inputs: q,k,v [B,H,Dh]; i_t,f_t [B,H]. All f32."""
+    q, k, v, it, ft = inputs
+    c, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c = f_p[..., None, None] * c + i_p[..., None, None] \
+        * k[..., :, None] * v[..., None, :]
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h_out = num / den[..., None]
+    return {"C": c, "n": n, "m": m_new}, h_out
+
+
+def _mlstm_inputs(cfg: ModelConfig, p: dict, x: jax.Array):
+    b, t, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, t, h, dh).astype(jnp.float32)
+    k = (x @ p["wk"].astype(dt)).reshape(b, t, h, dh).astype(
+        jnp.float32) / jnp.sqrt(float(dh))
+    v = (x @ p["wv"].astype(dt)).reshape(b, t, h, dh).astype(jnp.float32)
+    gf = (x @ p["wif"].astype(dt)).astype(jnp.float32).reshape(b, t, 2, h)
+    it, ft = gf[:, :, 0], gf[:, :, 1]
+    return q, k, v, it, ft
+
+
+def mlstm_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                return_state: bool = False):
+    """x: [B, T, d] -> [B, T, d] (optionally also the final state)."""
+    b, t, d = x.shape
+    q, k, v, it, ft = _mlstm_inputs(cfg, p, x)
+    state = mlstm_zero_state(cfg, b)
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, it, ft))  # time-major
+    final, hs = jax.lax.scan(_mlstm_step, state, xs)
+    hs = hs.swapaxes(0, 1).reshape(b, t, d).astype(x.dtype)
+    z = jax.nn.silu(x @ p["wz"].astype(x.dtype))
+    out = (hs * z) @ p["wo"].astype(x.dtype)
+    return (out, final) if return_state else out
+
+
+def mlstm_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    """x: [B, 1, d]; one recurrent step."""
+    q, k, v, it, ft = _mlstm_inputs(cfg, p, x)
+    state, h = _mlstm_step(
+        state, (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0]))
+    b, d = x.shape[0], x.shape[-1]
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    z = jax.nn.silu(x @ p["wz"].astype(x.dtype))
+    return (h * z) @ p["wo"].astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, strictly sequential, recurrent gate inputs)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "w": dense_init(ks[0], d, 4 * d, dtype),    # z, i, f, o pre-acts
+        "r": dense_init(ks[1], d, 4 * d, dtype),    # recurrent weights
+        "wo": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_zero_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(p, state, wx_t):
+    """wx_t: [B, 4d] precomputed input contribution."""
+    d = state["c"].shape[-1]
+    pre = wx_t + state["h"] @ p["r"].astype(jnp.float32)
+    z, it, ft, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    m_new = jnp.maximum(ft + state["m"], it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + state["m"] - m_new)
+    c = f_p * state["c"] + i_p * z
+    n = f_p * state["n"] + i_p
+    h = o * c / jnp.maximum(n, 1.0)
+    del d
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                return_state: bool = False):
+    b, t, d = x.shape
+    wx = (x @ p["w"].astype(x.dtype)).astype(jnp.float32)  # [B,T,4d]
+    state = slstm_zero_state(cfg, b)
+    final, hs = jax.lax.scan(lambda s, w_t: _slstm_step(p, s, w_t),
+                             state, wx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)
+    out = hs @ p["wo"].astype(x.dtype)
+    return (out, final) if return_state else out
+
+
+def slstm_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    wx = (x[:, 0] @ p["w"].astype(x.dtype)).astype(jnp.float32)
+    state, h = _slstm_step(p, state, wx)
+    out = (h[:, None].astype(x.dtype)) @ p["wo"].astype(x.dtype)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# Mamba head (Hymba's parallel-SSM path), Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4
+
+
+def _dt_rank(d_in: int) -> int:
+    return max(8, d_in // 16)
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    d_in = d
+    n = cfg.ssm_state or 16
+    r = _dt_rank(d_in)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, d_in)) * 0.2).astype(
+            dtype),
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d_in, 1))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "wb": dense_init(ks[2], d_in, n, dtype),
+        "wc": dense_init(ks[3], d_in, n, dtype),
+        "w_dt": dense_init(ks[4], d_in, r, dtype),
+        "w_dt2": dense_init(ks[5], r, d_in, dtype),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[6], d_in, d, dtype),
+    }
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int) -> dict:
+    d_in = cfg.d_model
+    n = cfg.ssm_state or 16
+    return {
+        "h": jnp.zeros((batch, d_in, n), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, d_in), jnp.float32),
+    }
+
+
+def _mamba_scan_inputs(cfg, p, xt):
+    """xt: [B, T, d_in] post-conv. Returns dt, b_t, c_t (f32)."""
+    dt32 = xt.astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt32 @ p["w_dt"].astype(jnp.float32) @ p["w_dt2"].astype(jnp.float32)
+        + p["dt_bias"])                                  # [B,T,d_in]
+    b_t = dt32 @ p["wb"].astype(jnp.float32)             # [B,T,N]
+    c_t = dt32 @ p["wc"].astype(jnp.float32)             # [B,T,N]
+    return dt, b_t, c_t
+
+
+def _mamba_step(a, d_skip, h, xt_t, dt_t, b_t, c_t):
+    """One selective-scan step; all f32.
+    h [B,d_in,N], xt_t [B,d_in], dt_t [B,d_in], b_t/c_t [B,N]."""
+    da = jnp.exp(dt_t[..., None] * a)                    # [B,d_in,N]
+    h = da * h + (dt_t * xt_t)[..., None] * b_t[:, None, :]
+    y = (h * c_t[:, None, :]).sum(-1) + d_skip * xt_t
+    return h, y
+
+
+def _causal_depthwise_conv(x, w):
+    """x: [B, T, C]; w: [K, C]; left-padded causal depthwise conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + xp[:, j:j + x.shape[1]] * w[j]
+    return out
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                return_state: bool = False):
+    b, t, d = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xt_pre, z = jnp.split(xz, 2, axis=-1)
+    xt = jax.nn.silu(
+        _causal_depthwise_conv(xt_pre, p["conv_w"].astype(x.dtype)))
+    dt, b_t, c_t = _mamba_scan_inputs(cfg, p, xt)
+    a = -jnp.exp(p["a_log"])                             # [d_in, N]
+    xt32 = xt.astype(jnp.float32)
+
+    def step(h, ins):
+        xt_t, dt_t, bb, cc = ins
+        return _mamba_step(a, p["d_skip"], h, xt_t, dt_t, bb, cc)
+
+    h0 = jnp.zeros((b, d, cfg.ssm_state or 16), jnp.float32)
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (xt32.swapaxes(0, 1), dt.swapaxes(0, 1),
+         b_t.swapaxes(0, 1), c_t.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    state = {"h": h_final,
+             "conv": xt_pre[:, t - (_CONV_K - 1):].astype(jnp.float32)}
+    return out, state
+
+
+def mamba_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                 state: dict) -> Tuple[jax.Array, dict]:
+    b = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"].astype(x.dtype)
+    xt_new, z = jnp.split(xz, 2, axis=-1)
+    # conv over the carried window [B, K-1, d_in] + new input
+    win = jnp.concatenate(
+        [state["conv"], xt_new[:, None].astype(jnp.float32)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    xt = jax.nn.silu((win * w[None]).sum(axis=1))        # [B, d_in]
+    dt, b_t, c_t = _mamba_scan_inputs(cfg, p, xt[:, None])
+    a = -jnp.exp(p["a_log"])
+    h, y = _mamba_step(a, p["d_skip"], state["h"], xt,
+                       dt[:, 0], b_t[:, 0], c_t[:, 0])
+    y = (y.astype(x.dtype) * jax.nn.silu(z))[:, None]
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": win[:, 1:]}

@@ -1,0 +1,87 @@
+"""AdamW with decoupled weight decay + global-norm clipping, pure pytrees.
+
+No optax dependency: the optimizer is part of the substrate the assignment
+asks us to build.  State layout mirrors params (m, v same sharding as the
+parameter they track, so TP-sharded weights get TP-sharded moments for
+free under GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "adamw_update",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init_opt_state(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(
+    grads,
+    state: OptState,
+    params,
+    lr: jax.Array,
+    cfg: AdamWConfig = AdamWConfig(),
+):
+    """Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(m=new_m, v=new_v, count=count), gnorm

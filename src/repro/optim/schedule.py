@@ -1,0 +1,26 @@
+"""LR schedules: linear warmup + cosine decay (the MoE-training default)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_schedule", "constant_schedule"]
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor_ratio: float = 0.1):
+    floor = peak_lr * floor_ratio
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = floor + 0.5 * (peak_lr - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant_schedule(lr_value: float):
+    return lambda step: jnp.asarray(lr_value, jnp.float32)

@@ -1,0 +1,131 @@
+"""Fault-tolerant training runtime.
+
+Production loop around a jit'd train_step:
+  * auto-resume: restores the newest committed checkpoint on start, so a
+    preempted/crashed job relaunches and continues bit-identically (the data
+    pipeline is (seed, step)-deterministic);
+  * preemption handling: SIGTERM/SIGINT trigger an emergency checkpoint at
+    the next step boundary before exit (the TPU-pod eviction contract);
+  * straggler watchdog: per-step wall times tracked against a rolling
+    median; steps slower than ``straggler_factor``x median are surfaced to a
+    callback (on a real fleet this feeds the replacement/elastic controller;
+    FLASH itself removes *collective-level* stragglers, this watches the
+    *host/step* level);
+  * metrics JSONL log for post-hoc analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import statistics
+import time
+from typing import Any, Callable, Dict, Iterable, Optional
+
+import jax
+
+from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int
+    ckpt_dir: str
+    ckpt_every: int = 200
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_window: int = 32
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        train_step: Callable,          # (state, batch) -> (state, metrics)
+        init_state: Callable[[], Any],
+        batches: Callable[[int], Dict],  # step -> host batch
+        straggler_cb: Optional[Callable[[int, float, float], None]] = None,
+        state_shardings: Any = None,
+    ):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.init_state = init_state
+        self.batches = batches
+        self.straggler_cb = straggler_cb or self._default_straggler_cb
+        self.state_shardings = state_shardings
+        self._preempted = False
+        self._step_times: list = []
+        self._straggler_events: list = []
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _resume_or_init(self):
+        state = self.init_state()
+        start = 0
+        if latest_step(self.cfg.ckpt_dir) is not None:
+            state, start = restore_checkpoint(
+                self.cfg.ckpt_dir, state, shardings=self.state_shardings)
+        return state, start
+
+    def _default_straggler_cb(self, step: int, dt: float, median: float):
+        self._straggler_events.append(
+            {"step": step, "dt": dt, "median": median})
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self) -> Dict[str, Any]:
+        self._install_signal_handlers()
+        os.makedirs(self.cfg.ckpt_dir, exist_ok=True)
+        log_path = os.path.join(self.cfg.ckpt_dir, "metrics.jsonl")
+        state, start = self._resume_or_init()
+        last_metrics: Dict[str, float] = {}
+        with open(log_path, "a") as log:
+            for step in range(start, self.cfg.total_steps):
+                t0 = time.perf_counter()
+                batch = self.batches(step)
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                dt = time.perf_counter() - t0
+                self._watch_straggler(step, dt)
+                last_metrics = {k: float(v) for k, v in metrics.items()}
+                if step % self.cfg.log_every == 0 or \
+                        step == self.cfg.total_steps - 1:
+                    rec = {"step": step, "dt_s": dt, **last_metrics}
+                    log.write(json.dumps(rec) + "\n")
+                    log.flush()
+                boundary = (step + 1) % self.cfg.ckpt_every == 0
+                if boundary or self._preempted or \
+                        step == self.cfg.total_steps - 1:
+                    save_checkpoint(self.cfg.ckpt_dir, step + 1, state,
+                                    keep_last=self.cfg.keep_last)
+                if self._preempted:
+                    return {"state": state, "stopped_at": step + 1,
+                            "preempted": True, "metrics": last_metrics,
+                            "stragglers": self._straggler_events}
+        return {"state": state, "stopped_at": self.cfg.total_steps,
+                "preempted": False, "metrics": last_metrics,
+                "stragglers": self._straggler_events}
+
+    def _watch_straggler(self, step: int, dt: float):
+        w = self._step_times
+        w.append(dt)
+        if len(w) > self.cfg.straggler_window:
+            w.pop(0)
+        if len(w) >= 8:
+            med = statistics.median(w)
+            if dt > self.cfg.straggler_factor * med:
+                self.straggler_cb(step, dt, med)

@@ -1,0 +1,110 @@
+"""Property tests for the Birkhoff-von Neumann scheduler (paper section 4.2)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.birkhoff import (
+    birkhoff_decompose,
+    hopcroft_karp,
+    max_line_sum,
+    pad_to_doubly_balanced,
+)
+
+
+def _matrices(max_n=8, max_v=1000.0):
+    return st.integers(2, max_n).flatmap(
+        lambda n: st.lists(
+            st.lists(st.floats(0, max_v, allow_nan=False), min_size=n,
+                     max_size=n),
+            min_size=n, max_size=n,
+        ).map(lambda rows: _zero_diag(np.array(rows))))
+
+
+def _zero_diag(t):
+    np.fill_diagonal(t, 0.0)
+    return t
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_padding_balances_lines(t):
+    pad = pad_to_doubly_balanced(t)
+    m = t + pad
+    target = max_line_sum(t)
+    assert pad.min() >= 0
+    if target > 0:
+        np.testing.assert_allclose(m.sum(axis=0), target, rtol=1e-6)
+        np.testing.assert_allclose(m.sum(axis=1), target, rtol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_decomposition_reconstructs_exactly(t):
+    n = t.shape[0]
+    stages = birkhoff_decompose(t)
+    recon = sum((s.as_matrix(n) for s in stages), np.zeros_like(t))
+    np.testing.assert_allclose(recon, t, atol=1e-6 * max(t.max(), 1.0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_makespan_is_optimal(t):
+    """Sum of stage sizes equals the Theorem-1 lower bound numerator."""
+    stages = birkhoff_decompose(t)
+    makespan = sum(s.size for s in stages)
+    assert makespan <= max_line_sum(t) * (1 + 1e-9)
+    if t.sum() > 0:
+        # and it can never beat the bound either
+        assert makespan >= max_line_sum(t) * (1 - 1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_stage_count_bound(t):
+    """Classic Birkhoff bound: at most n^2 - 2n + 2 stages."""
+    n = t.shape[0]
+    stages = birkhoff_decompose(t)
+    assert len(stages) <= n * n - 2 * n + 2
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_stages_incast_free(t):
+    """Each stage is (a partial) permutation: one sender per receiver."""
+    for s in birkhoff_decompose(t):
+        dsts = [j for j in s.perm if j >= 0]
+        assert len(dsts) == len(set(dsts))
+        assert s.size > 0
+        for i, j in enumerate(s.perm):
+            assert j != i  # no self-traffic
+
+
+@settings(max_examples=60, deadline=None)
+@given(_matrices())
+def test_stages_ascending(t):
+    sizes = [s.size for s in birkhoff_decompose(t, sort_ascending=True)]
+    assert sizes == sorted(sizes)
+
+
+def test_hopcroft_karp_perfect_matching():
+    # bipartite 4x4 with a known perfect matching
+    adj = [[0, 1], [1], [2, 3], [3]]
+    match = hopcroft_karp(adj, 4)
+    assert sorted(match) == [0, 1, 2, 3]
+
+
+def test_hopcroft_karp_partial():
+    adj = [[0], [0], [1]]
+    match = hopcroft_karp(adj, 2)
+    assert sum(1 for m in match if m >= 0) == 2
+
+
+def test_rejects_nonzero_diagonal():
+    t = np.ones((3, 3))
+    with pytest.raises(ValueError):
+        birkhoff_decompose(t)
+
+
+def test_empty_and_zero():
+    assert birkhoff_decompose(np.zeros((4, 4))) == []

@@ -1,0 +1,93 @@
+"""Multi-device collective tests (subprocess with 8 fake CPU devices)."""
+
+import pytest
+
+
+def test_all_to_all_impl_equivalence(subproc):
+    """flash == hierarchical == direct == mathematical reference."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.comm import direct_all_to_all, flash_all_to_all, \\
+    hierarchical_all_to_all
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+C, D, n_shards = 3, 5, 4
+rng = np.random.default_rng(0)
+x = rng.normal(size=(2 * 2 * n_shards, C, D)).astype(np.float32)
+spec = P(("pod", "data"))
+outs = {}
+for name, fn in [("direct", direct_all_to_all),
+                 ("flash", flash_all_to_all),
+                 ("hier", hierarchical_all_to_all)]:
+    f = jax.shard_map(partial(fn, slow_axis="pod", fast_axes=("data",)),
+                      mesh=mesh, in_specs=spec, out_specs=spec)
+    outs[name] = np.asarray(jax.jit(f)(x))
+ref = np.swapaxes(x.reshape(n_shards, n_shards, C, D), 0, 1) \\
+    .reshape(2 * 2 * n_shards, C, D)
+assert np.array_equal(outs["direct"], ref), "direct != ref"
+assert np.array_equal(outs["flash"], ref), "flash != ref"
+assert np.array_equal(outs["hier"], ref), "hier != ref"
+print("EQUIV_OK")
+""")
+    assert "EQUIV_OK" in out
+
+
+def test_rotation_all_to_all(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.comm import rotation_all_to_all
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 2), ("pod", "model"))
+rng = np.random.default_rng(1)
+x = rng.normal(size=(16, 6)).astype(np.float32)  # 4 shards x 4 rows
+f = jax.shard_map(partial(rotation_all_to_all, axis="pod"),
+                  mesh=mesh, in_specs=P("pod"), out_specs=P("pod"))
+out = np.asarray(jax.jit(f)(x))
+ref = np.swapaxes(x.reshape(4, 4, 1, 6), 0, 1).reshape(16, 6)
+assert np.array_equal(out, ref)
+print("ROT_OK")
+""")
+    assert "ROT_OK" in out
+
+
+def test_ef_compressed_psum(subproc):
+    """int8 EF sum: ~1e-2 one-shot error; error feedback kills bias."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.comm import ef_compressed_psum
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+rng = np.random.default_rng(0)
+g = rng.normal(size=(2, 64, 32)).astype(np.float32)
+
+def sync(gl, err):
+    total, new_err = ef_compressed_psum(gl[0], "pod", err[0])
+    return total[None], new_err[None]
+
+f = jax.jit(jax.shard_map(
+    sync, mesh=mesh, in_specs=(P("pod"), P("pod")),
+    out_specs=(P("pod"), P("pod"))))
+true = g.sum(0)
+err = np.zeros_like(g)
+tot, err = f(g, err)
+rel = np.abs(np.asarray(tot)[0] - true).max() / np.abs(true).max()
+assert rel < 0.05, rel
+# repeated steps with same grad: error feedback => mean approaches truth
+acc = np.zeros_like(true)
+err = np.zeros_like(g)
+for i in range(16):
+    tot, err = f(g, err)
+    acc += np.asarray(tot)[0]
+rel_mean = np.abs(acc / 16 - true).max() / np.abs(true).max()
+assert rel_mean < 0.012, rel_mean
+print("EF_OK")
+""")
+    assert "EF_OK" in out

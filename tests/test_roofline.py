@@ -1,0 +1,85 @@
+"""HLO collective parser + roofline-term math against synthetic fixtures."""
+
+import pytest
+
+from repro.launch.roofline import (
+    HW,
+    CollectiveStats,
+    parse_collectives,
+    roofline_terms,
+)
+
+# Synthetic optimized-HLO snippets in the forms XLA emits.
+HLO_FIXTURE = """
+HloModule jit_step
+
+%add.clone_promoted (x: f32[], y: f32[]) -> f32[] {
+}
+
+ENTRY %main {
+  %ar1 = f32[16,4096,1024]{2,1,0} all-reduce(%a), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add.clone_promoted
+  %ag1 = bf16[2048,1024]{1,0} all-gather(%b), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %aa1 = bf16[32,128,64]{2,1,0} all-to-all(%c), channel_id=3, replica_groups=[16,32]<=[2,16,16]T(1,2,0)
+  %cp1 = bf16[64,256]{1,0} collective-permute(%d), channel_id=4, source_target_pairs={{0,256},{256,0}}
+  %rs1 = f32[8,16]{1,0} reduce-scatter(%e), channel_id=5, replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}, to_apply=%add
+}
+"""
+
+
+def test_parse_counts_and_bytes():
+    st = parse_collectives(HLO_FIXTURE, pod_size=256)
+    assert st.count == 5
+    # ar1: promoted f32 counted at bf16 width: 16*4096*1024*4/2 = 134217728
+    assert st.by_op["all-reduce"] == pytest.approx(
+        2 * 134217728 * 15 / 16)
+    # ag1: 2048*1024*2 * 15/16
+    assert st.by_op["all-gather"] == pytest.approx(
+        2048 * 1024 * 2 * 15 / 16)
+
+
+def test_iota_group_pod_crossing():
+    """[16,32]<=[2,16,16]T(1,2,0): groups mix pod 0 and pod 1 devices."""
+    st = parse_collectives(HLO_FIXTURE, pod_size=256)
+    assert st.dcn_bytes > 0
+    # the all-to-all (pod-crossing) + permute land in DCN
+    expected_aa = 32 * 128 * 64 * 2 * 31 / 32
+    expected_cp = 64 * 256 * 2
+    assert st.dcn_bytes == pytest.approx(expected_aa + expected_cp)
+
+
+def test_intra_pod_groups_stay_ici():
+    st = parse_collectives(HLO_FIXTURE, pod_size=256)
+    # ar1 and ag1 ([16,16]<=[256]: consecutive blocks of 16 within pod 0)
+    assert st.ici_bytes == pytest.approx(
+        2 * 134217728 * 15 / 16 + 2048 * 1024 * 2 * 15 / 16
+        + 8 * 16 * 4 * 3)  # + rs1 (explicit small groups)
+
+
+def test_explicit_group_list_parsing():
+    st = parse_collectives(HLO_FIXTURE, pod_size=4)
+    # with pod_size=4 the reduce-scatter groups {0..3},{4..7} stay intra
+    hlo_rs = [l for l in HLO_FIXTURE.splitlines() if "reduce-scatter" in l]
+    assert hlo_rs
+    assert st.count == 5
+
+
+def test_roofline_terms_dominant():
+    coll = CollectiveStats(simple_bytes=1e9, wire_bytes=1e9, ici_bytes=5e8,
+                           dcn_bytes=5e8, count=3)
+    t = roofline_terms(flops_per_chip=1.97e14, bytes_per_chip=819e9,
+                       coll=coll)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    assert t["collective_s"] == pytest.approx(5e8 / 50e9 + 5e8 / 25e9)
+    assert t["dominant"] in ("compute", "memory")
+    assert 0 < t["roofline_fraction"] <= 1.0
+
+
+def test_promoted_reduction_halved():
+    line_promoted = ("%ar = f32[1024]{0} all-reduce(%x), replica_groups="
+                     "[4,4]<=[16], to_apply=%add.clone_promoted\n")
+    line_plain = ("%ar = f32[1024]{0} all-reduce(%x), replica_groups="
+                  "[4,4]<=[16], to_apply=%add\n")
+    sp = parse_collectives(line_promoted, pod_size=256)
+    pl = parse_collectives(line_plain, pod_size=256)
+    assert sp.wire_bytes == pytest.approx(pl.wire_bytes / 2)

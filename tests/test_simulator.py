@@ -1,0 +1,122 @@
+"""Alpha-beta simulator vs the paper's analytic bounds and claims."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ClusterSpec,
+    balanced_workload,
+    gap_bound,
+    moe_workload,
+    random_workload,
+    simulate,
+    skewed_workload,
+    t_flash_worst_case,
+    t_optimal,
+)
+from repro.core.bounds import check_workload_assumption
+
+# alpha = 0 so the analytic bounds (which exclude wakeup latency) apply.
+C0 = ClusterSpec(n_servers=4, m_gpus=8, alpha=0.0)
+
+
+def _workloads(cluster):
+    return [
+        balanced_workload(cluster, 4 << 20),
+        random_workload(cluster, 4 << 20, seed=1),
+        skewed_workload(cluster, 4 << 20, 1.2, seed=2),
+        moe_workload(cluster, 8192, 4096, top_k=2, seed=3),
+    ]
+
+
+@pytest.mark.parametrize("idx", range(4))
+def test_flash_between_optimal_and_worst_case(idx):
+    w = _workloads(C0)[idx]
+    r = simulate(w, "flash")
+    assert r.completion_time >= t_optimal(w) * (1 - 1e-9)
+    if check_workload_assumption(w):
+        assert r.completion_time <= t_flash_worst_case(w) * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 8), st.integers(0, 10_000))
+def test_gap_bound_theorem3(n, m, seed):
+    cluster = ClusterSpec(n_servers=n, m_gpus=m, alpha=0.0)
+    w = random_workload(cluster, 1 << 20, seed=seed)
+    r = simulate(w, "flash")
+    bound = gap_bound(cluster)
+    assert r.completion_time <= t_optimal(w) * bound * (1 + 1e-6)
+
+
+def test_flash_beats_spreadout_under_skew():
+    w = skewed_workload(C0, 4 << 20, zipf_s=1.2, seed=0)
+    flash = simulate(w, "flash")
+    spread = simulate(w, "spreadout")
+    assert flash.algbw > 2.0 * spread.algbw  # paper: 2.5-2.7x for skewed
+
+
+def test_hierarchical_matches_flash_on_balanced():
+    """Paper Fig 12a: MSCCL within 0.91-1.0x of FLASH on balanced."""
+    w = balanced_workload(C0, 16 << 20)
+    flash = simulate(w, "flash")
+    hier = simulate(w, "hierarchical")
+    assert hier.algbw >= 0.85 * flash.algbw
+
+
+def test_hierarchical_loses_under_skew():
+    w = skewed_workload(C0, 4 << 20, zipf_s=1.2, seed=0)
+    assert simulate(w, "flash").algbw > 1.5 * simulate(w, "hierarchical").algbw
+
+
+def test_fanout_incast_collapse():
+    """Paper Fig 12a: RCCL collapses at large balanced transfers."""
+    w_small = balanced_workload(C0, 64 << 10)
+    w_large = balanced_workload(C0, 64 << 20)
+    small = simulate(w_small, "fanout")
+    large = simulate(w_large, "fanout")
+    opt_large = simulate(w_large, "optimal")
+    assert large.algbw < 0.05 * opt_large.algbw
+    assert small.algbw / simulate(w_small, "optimal").algbw > \
+        large.algbw / opt_large.algbw
+
+
+def test_flash_near_optimal_on_balanced():
+    """Paper: FLASH reaches 98% of optimal at large balanced transfers."""
+    w = balanced_workload(ClusterSpec(4, 8, alpha=10e-6), 128 << 20)
+    r = simulate(w, "flash")
+    assert r.algbw >= 0.9 * simulate(w, "optimal").algbw
+
+
+def test_breakdown_sums_to_total():
+    w = skewed_workload(C0, 4 << 20, seed=5)
+    r = simulate(w, "flash")
+    assert np.isclose(sum(r.breakdown.values()), r.completion_time,
+                      rtol=1e-9)
+
+
+def test_bw_ratio_shrinks_gap():
+    """Theorem 3 trend (paper Fig 16b): faster intra => closer to optimal."""
+    gaps = []
+    for b1 in (64e9, 256e9, 1024e9):
+        c = ClusterSpec(4, 8, b_intra=b1, alpha=0.0)
+        w = skewed_workload(c, 4 << 20, seed=7)
+        gaps.append(simulate(w, "flash").completion_time / t_optimal(w))
+    assert gaps[0] >= gaps[1] >= gaps[2]
+    assert gaps[2] < 1.1
+
+
+def test_synthesis_time_micro():
+    """Paper Fig 17a: schedule synthesis in us-to-ms, not minutes."""
+    from repro.core import synthesis_time
+    t = synthesis_time(n_servers=4, m_gpus=8, seed=0)
+    assert t < 0.05  # 50 ms worst case on a slow CI box; paper: ~15-32 us
+
+
+def test_memory_overhead_slope():
+    """Paper Fig 17b: FLASH ~2.6x workload bytes vs baseline 2x."""
+    w = random_workload(C0, 8 << 20, seed=3)
+    flash = simulate(w, "flash")
+    base = simulate(w, "spreadout")
+    assert base.memory_bytes == pytest.approx(2.0 * w.total_bytes)
+    assert 2.0 < flash.memory_bytes / w.total_bytes < 3.2

@@ -4,8 +4,8 @@ skewed workloads, FLASH vs all baselines, on the 4x8 MI300X testbed model."""
 from __future__ import annotations
 
 from repro.core import (
-    ALGORITHMS,
     ClusterSpec,
+    available_schedulers,
     balanced_workload,
     random_workload,
     simulate,
@@ -31,7 +31,7 @@ def run(csv: Csv):
     for kind in ("balanced", "random", "skewed"):
         for size in SIZES:
             w = _workload(kind, cluster, size)
-            results = {a: simulate(w, a) for a in ALGORITHMS}
+            results = {a: simulate(w, a) for a in available_schedulers()}
             flash = results["flash"]
             derived = (
                 f"algbw_gbps={flash.algbw_gbps():.2f}"

@@ -26,3 +26,8 @@ def run(csv: Csv):
             f"|inter_pct={100 * bd['inter'] / total:.1f}"
             f"|tail_pct={100 * bd['tail'] / total:.1f}")
         csv.emit(f"fig13.zipf{s}", total * 1e6, derived)
+
+
+if __name__ == "__main__":  # CI smoke entry point
+    print("name,us_per_call,derived")
+    run(Csv())

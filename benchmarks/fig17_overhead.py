@@ -1,25 +1,46 @@
 """Paper Fig 17: (a) schedule-synthesis time vs cluster size; (b) memory
-footprint slope vs workload bytes."""
+footprint slope vs workload bytes; plus the beyond-paper PlanCache row
+(dynamic-MoE re-synthesis skipped on repeated traffic fingerprints)."""
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import ClusterSpec, flash_schedule, random_workload, simulate
+from repro.core import (
+    ClusterSpec,
+    PlanCache,
+    get_scheduler,
+    moe_workload,
+    random_workload,
+    simulate,
+)
 
 from .common import Csv, time_us
 
 
 def run(csv: Csv):
+    flash = get_scheduler("flash")
     # (a) synthesis wall-time: paper reports ~15-32us at small scale,
     # <1ms for <10 servers, <0.25s for <50 servers (O(n^4.5-5) in servers)
     for n in (3, 4, 8, 16, 32, 50):
         cluster = ClusterSpec(n_servers=n, m_gpus=8)
         w = random_workload(cluster, 4 << 20, seed=0)
-        us = time_us(lambda: flash_schedule(w), repeats=3)
-        plan = flash_schedule(w)
+        us = time_us(lambda: flash.synthesize(w), repeats=3)
+        plan = flash.synthesize(w)
         csv.emit(f"fig17a.synth.servers{n}", us,
                  f"n_stages={plan.n_stages}")
+    # (a') PlanCache: iterations whose MoE gating signature repeats skip
+    # synthesis entirely -- cached lookup vs fresh synthesis wall time.
+    cluster = ClusterSpec(n_servers=8, m_gpus=8)
+    w = moe_workload(cluster, 8192, 4096, top_k=2, seed=0)
+    cache = PlanCache()
+    simulate(w, "flash", cache=cache)  # warm: 1 miss
+    us_cached = time_us(lambda: simulate(w, "flash", cache=cache), repeats=5)
+    us_fresh = time_us(lambda: simulate(w, "flash"), repeats=5)
+    csv.emit("fig17a.plan_cache", us_cached,
+             f"fresh_us={us_fresh:.1f}"
+             f"|speedup={us_fresh / max(us_cached, 1e-9):.1f}x"
+             f"|hits={cache.hits}|misses={cache.misses}")
     # (b) memory slope: baseline 2.0x, FLASH ~2.6x
     cluster = ClusterSpec(n_servers=4, m_gpus=8)
     sizes = [4 << 20, 16 << 20, 64 << 20]

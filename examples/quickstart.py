@@ -1,19 +1,20 @@
-"""Quickstart: schedule an All-to-All with FLASH and inspect the plan.
+"""Quickstart: schedule an All-to-All with FLASH and inspect the Plan IR.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the paper's 4x8 MI300X testbed model, generates a skewed MoE-style
-traffic matrix, synthesizes the FLASH schedule (Birkhoff decomposition over
-the server-level matrix), times every baseline on the alpha-beta simulator,
-and prints the stage list.
+traffic matrix, synthesizes the FLASH schedule through the Scheduler ->
+Plan -> Executor pipeline (Birkhoff decomposition over the server-level
+matrix), validates byte conservation, times every registered scheduler on
+the generic alpha-beta executor, and demonstrates PlanCache reuse on
+repeated traffic fingerprints.
 """
 
-import numpy as np
-
 from repro.core import (
-    ALGORITHMS,
     ClusterSpec,
-    flash_schedule,
+    PlanCache,
+    available_schedulers,
+    get_scheduler,
     moe_workload,
     simulate,
     t_optimal,
@@ -31,9 +32,10 @@ def main():
     print(f"workload: {w.total_bytes / 1e6:.1f} MB total "
           f"(MoE top-2 gating, skewed)\n")
 
-    plan = flash_schedule(w)
+    plan = get_scheduler("flash").synthesize(w)
+    plan.validate(w)  # byte conservation + permutation structure
     print(f"FLASH synthesized {plan.n_stages} inter-server stages "
-          f"in {plan.synth_seconds * 1e6:.0f} us:")
+          f"in {plan.synth_seconds * 1e6:.0f} us (plan validated):")
     for i, stage in enumerate(plan.stages):
         arrows = " ".join(f"{s}->{d}" for s, d in enumerate(stage.perm)
                           if d >= 0)
@@ -41,10 +43,18 @@ def main():
 
     print(f"\ntheoretical optimum (Thm 1): {t_optimal(w) * 1e3:.2f} ms")
     print(f"{'algorithm':14s} {'time ms':>9s} {'AlgoBW GB/s':>12s}")
-    for name in ALGORITHMS:
+    for name in available_schedulers():
         r = simulate(w, name)
         print(f"{name:14s} {r.completion_time * 1e3:9.2f} "
               f"{r.algbw_gbps():12.2f}")
+
+    # Dynamic-MoE reuse: a repeated traffic fingerprint skips synthesis.
+    cache = PlanCache()
+    for _ in range(3):
+        simulate(w, "flash", cache=cache)
+    print(f"\nPlanCache over 3 identical iterations: "
+          f"{cache.hits} hits / {cache.misses} miss "
+          f"(hit rate {cache.hit_rate:.0%})")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,20 @@
-"""jit-integrated collectives: FLASH all-to-all + gradient-sync variants."""
+"""jit-integrated collectives: FLASH all-to-all + gradient-sync variants.
+
+Implementation selection goes through one registry
+(``register_all_to_all_impl`` / ``resolve_all_to_all``) shared by model
+code, ``launch/`` and the benchmarks; see DESIGN.md section 3.
+"""
 
 from .all_to_all import (
     ALL_TO_ALL_IMPLS,
     all_to_all_by_name,
+    available_all_to_all_impls,
     direct_all_to_all,
     flash_all_to_all,
     hierarchical_all_to_all,
     intra_all_to_all,
+    register_all_to_all_impl,
+    resolve_all_to_all,
     rotation_all_to_all,
 )
 from .collectives import ef_compressed_psum, psum_bf16, tree_ef_state
@@ -14,6 +22,9 @@ from .collectives import ef_compressed_psum, psum_bf16, tree_ef_state
 __all__ = [
     "ALL_TO_ALL_IMPLS",
     "all_to_all_by_name",
+    "available_all_to_all_impls",
+    "register_all_to_all_impl",
+    "resolve_all_to_all",
     "direct_all_to_all",
     "flash_all_to_all",
     "hierarchical_all_to_all",

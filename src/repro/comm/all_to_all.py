@@ -36,7 +36,9 @@ and the benchmarks.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence, Tuple, Union
+from typing import Callable, Optional, Sequence, Tuple, Union
+
+from .. import jax_compat  # noqa: F401  (installs shims on older jax)
 
 import jax
 import jax.numpy as jnp
@@ -47,10 +49,31 @@ __all__ = [
     "flash_all_to_all",
     "hierarchical_all_to_all",
     "ALL_TO_ALL_IMPLS",
+    "register_all_to_all_impl",
+    "available_all_to_all_impls",
+    "resolve_all_to_all",
     "axis_sizes",
 ]
 
 AxisNames = Union[str, Tuple[str, ...]]
+
+# name -> fn(x, slow_axis, fast_axes); the single registry through which
+# model code, launch/ and benchmarks select jit-integrated A2A schedules.
+ALL_TO_ALL_IMPLS: dict = {}
+
+
+def register_all_to_all_impl(name: str):
+    """Decorator: register a two-tier all_to_all implementation."""
+
+    def deco(fn):
+        ALL_TO_ALL_IMPLS[name] = fn
+        return fn
+
+    return deco
+
+
+def available_all_to_all_impls() -> list:
+    return sorted(ALL_TO_ALL_IMPLS)
 
 
 def _as_tuple(axes: AxisNames) -> Tuple[str, ...]:
@@ -65,6 +88,7 @@ def axis_sizes(axes: AxisNames) -> int:
     return total
 
 
+@register_all_to_all_impl("direct")
 def direct_all_to_all(x: jax.Array, slow_axis: str,
                       fast_axes: AxisNames) -> jax.Array:
     """Single flat all_to_all over the combined (slow, fast...) axis.
@@ -84,6 +108,7 @@ def intra_all_to_all(x: jax.Array, fast_axes: AxisNames) -> jax.Array:
         x, _as_tuple(fast_axes), split_axis=0, concat_axis=0, tiled=True)
 
 
+@register_all_to_all_impl("flash")
 def flash_all_to_all(x: jax.Array, slow_axis: str,
                      fast_axes: AxisNames) -> jax.Array:
     """FLASH two-tier All-to-All: balance over ICI first, then one
@@ -133,6 +158,7 @@ def flash_all_to_all(x: jax.Array, slow_axis: str,
     return out.reshape(n, *rest)
 
 
+@register_all_to_all_impl("hierarchical")
 def hierarchical_all_to_all(x: jax.Array, slow_axis: str,
                             fast_axes: AxisNames) -> jax.Array:
     """MSCCL-style baseline: DCN transfer first, intra redistribute after.
@@ -207,13 +233,6 @@ def rotation_all_to_all(x: jax.Array, axis: str) -> jax.Array:
     return out
 
 
-ALL_TO_ALL_IMPLS = {
-    "direct": direct_all_to_all,
-    "flash": flash_all_to_all,
-    "hierarchical": hierarchical_all_to_all,
-}
-
-
 def all_to_all_by_name(name: str):
     try:
         return ALL_TO_ALL_IMPLS[name]
@@ -221,3 +240,46 @@ def all_to_all_by_name(name: str):
         raise ValueError(
             f"unknown all_to_all impl {name!r}; pick from "
             f"{sorted(ALL_TO_ALL_IMPLS)}")
+
+
+def resolve_all_to_all(
+    dist=None,
+    *,
+    slow_axis: Optional[str] = None,
+    ep_axes: Optional[Sequence[str]] = None,
+    impl: str = "flash",
+) -> Optional[Callable[[jax.Array], jax.Array]]:
+    """Select the jit-integrated A2A schedule for an EP-axis layout.
+
+    The single dispatch point for model code, ``launch/`` and benchmarks
+    (previously hand-rolled inside ``models/moe.py``).  Pass either a
+    ``DistContext``-like object (attributes ``slow_axis``, ``ep_axes``,
+    ``a2a_impl``) or the raw keyword form.
+
+    Selection:
+      * EP spans the slow axis plus fast axes -> the registered two-tier
+        impl ``impl`` (flash | direct | hierarchical | ...).
+      * EP is exactly the slow axis -> the FLASH rotation schedule (every
+        DCN link carries one contiguous chunk per stage, incast-free by
+        construction).
+      * EP is fast-only -> a plain intra all_to_all over ICI.
+      * No EP axes -> None (no exchange needed).
+
+    Returns a unary ``buf -> buf`` callable, or None.
+    """
+    if dist is not None:
+        slow_axis = dist.slow_axis
+        ep_axes = dist.ep_axes
+        impl = dist.a2a_impl
+    # Fail fast on unknown impl names on every path, including the
+    # rotation/ICI-only ones that do not dispatch through the registry.
+    two_tier = all_to_all_by_name(impl)
+    ep = tuple(ep_axes or ())
+    if not ep:
+        return None
+    if slow_axis in ep and len(ep) > 1:
+        fast = tuple(a for a in ep if a != slow_axis)
+        return partial(two_tier, slow_axis=slow_axis, fast_axes=fast)
+    if ep == (slow_axis,):
+        return partial(rotation_all_to_all, axis=slow_axis)
+    return partial(intra_all_to_all, fast_axes=ep)

@@ -1,14 +1,40 @@
 """FLASH: two-tier All-to-All scheduling (the paper's core contribution).
 
-Host-side schedule synthesis (Birkhoff decomposition over the server-level
-traffic matrix), the paper's baselines, the alpha-beta simulator used for
-every benchmark figure, and the Theorem 1-3 analytic bounds.
+One Scheduler -> Plan -> Executor pipeline: every algorithm (FLASH and the
+paper's baselines) is a registered ``Scheduler`` synthesizing a typed,
+scheduler-agnostic ``Plan`` (plan.py); a single generic alpha-beta executor
+(simulator.py) times any Plan.  ``PlanCache`` skips re-synthesis when a
+dynamic-MoE traffic fingerprint repeats across iterations.  The Theorem 1-3
+analytic bounds live in bounds.py.
 """
 
 from .birkhoff import Stage, birkhoff_decompose, max_line_sum
 from .bounds import gap_bound, t_flash_worst_case, t_optimal
-from .schedulers import FlashPlan, flash_schedule, synthesis_time
-from .simulator import ALGORITHMS, SimResult, simulate
+from .plan import (
+    BarrierStage,
+    BoundStage,
+    FanOutBurst,
+    IntraOverlapPhase,
+    LoadBalancePhase,
+    PermutationStage,
+    Plan,
+    PlanCache,
+    PlanValidationError,
+    RailStage,
+    RedistributePhase,
+    traffic_fingerprint,
+)
+from .schedulers import (
+    FlashPlan,
+    Scheduler,
+    available_schedulers,
+    flash_schedule,
+    get_scheduler,
+    optimal_completion_time,
+    register_scheduler,
+    synthesis_time,
+)
+from .simulator import ALGORITHMS, SimResult, execute_plan, simulate
 from .traffic import (
     ClusterSpec,
     Workload,
@@ -26,12 +52,30 @@ __all__ = [
     "gap_bound",
     "t_flash_worst_case",
     "t_optimal",
+    "Plan",
+    "PlanCache",
+    "PlanValidationError",
+    "traffic_fingerprint",
+    "LoadBalancePhase",
+    "PermutationStage",
+    "BarrierStage",
+    "FanOutBurst",
+    "RailStage",
+    "BoundStage",
+    "RedistributePhase",
+    "IntraOverlapPhase",
+    "Scheduler",
+    "register_scheduler",
+    "get_scheduler",
+    "available_schedulers",
+    "optimal_completion_time",
     "FlashPlan",
     "flash_schedule",
     "synthesis_time",
     "ALGORITHMS",
     "SimResult",
     "simulate",
+    "execute_plan",
     "ClusterSpec",
     "Workload",
     "balanced_workload",

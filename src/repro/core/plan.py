@@ -1,0 +1,510 @@
+"""Scheduler-agnostic Plan IR: the contract between synthesis and execution.
+
+A ``Plan`` is a typed, ordered sequence of phases describing *what moves
+where, under which concurrency semantics* -- with no timing model attached.
+Schedulers (schedulers.py) synthesize Plans; the single generic alpha-beta
+executor (simulator.py) times them.  Incast and straggler effects are
+properties of *stage types*, not algorithm names:
+
+  * ``PermutationStage``  -- one sender per receiver, equal chunk size
+                             (incast-free, straggler-free; FLASH/Birkhoff).
+                             Consecutive permutation stages pipeline: stage
+                             k's intra redistribute hides under stage k+1's
+                             inter transfer (paper Theorem 2).
+  * ``BarrierStage``      -- a barrier-synchronized set of point-to-point
+                             flows; the stage waits for its slowest flow
+                             (the straggler effect; MPI SpreadOut).
+  * ``FanOutBurst``       -- everything at once; NICs fair-share and incast
+                             collapse beyond buffer absorption (RCCL FanOut).
+  * ``RailStage``         -- rail-aligned NIC loads progressing in rotation
+                             rounds (MSCCL-style hierarchical).
+  * ``BoundStage``        -- analytic Theorem-1 bound (the 'optimal' line;
+                             not executable on hardware, timeable here).
+
+Pre/post phases: ``LoadBalancePhase`` (intra-server shedding before the
+inter phase), ``RedistributePhase`` (the un-hidden pipeline tail) and
+``IntraOverlapPhase`` (local traffic overlapped with the inter phase).
+
+Every phase serializes to plain JSON-compatible dicts (``to_dict`` /
+``from_dict`` via the ``PHASE_KINDS`` registry) and reports the genuine
+payload bytes it carries so ``Plan.validate`` can check byte conservation
+against the source workload.
+
+``PlanCache`` keys synthesized plans by a traffic-matrix fingerprint --
+the paper's dynamic-MoE reuse story: expert routing shifts every few
+hundred milliseconds but frequently *repeats* signatures across iterations,
+so re-synthesis can be skipped when the fingerprint hits (hit/miss counters
+exposed).  See DESIGN.md section 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Any, ClassVar, Dict, Optional, Tuple
+
+import numpy as np
+
+from .traffic import ClusterSpec, Workload, server_reduce
+
+__all__ = [
+    "Plan",
+    "PlanValidationError",
+    "PlanCache",
+    "traffic_fingerprint",
+    "LoadBalancePhase",
+    "PermutationStage",
+    "BarrierStage",
+    "FanOutBurst",
+    "RailStage",
+    "BoundStage",
+    "RedistributePhase",
+    "IntraOverlapPhase",
+    "PHASE_KINDS",
+]
+
+
+class PlanValidationError(ValueError):
+    """A Plan fails structural or byte-conservation checks."""
+
+
+# kind string -> phase class, for from_dict round-tripping.
+PHASE_KINDS: Dict[str, type] = {}
+
+
+def register_phase(cls):
+    PHASE_KINDS[cls.kind] = cls
+    return cls
+
+
+def _np2d(v) -> np.ndarray:
+    return np.asarray(v, dtype=np.float64)
+
+
+def _listify(a: np.ndarray):
+    return np.asarray(a, dtype=np.float64).tolist()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PhaseBase:
+    """Common serialization + payload-accounting interface.
+
+    ``payload(cluster)`` returns ``(inter_bytes, intra_bytes)`` of *genuine
+    workload payload* this phase carries across the inter-server network and
+    the intra-server fabric respectively.  Auxiliary movement (load-balance
+    shedding, redistribute copies) reports (0, 0): it is overhead the
+    schedule added, not workload bytes, so it is excluded from conservation.
+    """
+
+    kind: ClassVar[str] = "base"
+
+    def payload(self, cluster: ClusterSpec) -> Tuple[float, float]:
+        return 0.0, 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "PhaseBase":
+        raise NotImplementedError
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class LoadBalancePhase(PhaseBase):
+    """Intra-server head phase: each GPU sheds ``moved_per_gpu`` bytes over
+    the intra fabric before the inter phase starts (FLASH load balance /
+    hierarchical rail gather).  Auxiliary movement: not payload."""
+
+    kind: ClassVar[str] = "load_balance"
+    moved_per_gpu: np.ndarray  # (n_servers, m_gpus)
+    charge_alpha: bool = True  # FLASH charges a wakeup; rail gather does not
+
+    def to_dict(self):
+        return {"kind": self.kind,
+                "moved_per_gpu": _listify(self.moved_per_gpu),
+                "charge_alpha": bool(self.charge_alpha)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(moved_per_gpu=_np2d(d["moved_per_gpu"]),
+                   charge_alpha=bool(d["charge_alpha"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class PermutationStage(PhaseBase):
+    """One incast-free, straggler-free inter-server stage: server i sends a
+    ``size``-byte slot to server ``perm[i]`` (-1 = idle padding slot);
+    ``sent[i]`` is the genuine payload inside the slot."""
+
+    kind: ClassVar[str] = "permutation"
+    perm: Tuple[int, ...]
+    size: float
+    sent: Tuple[float, ...]
+
+    def payload(self, cluster):
+        return float(sum(self.sent)), 0.0
+
+    @property
+    def real_bytes(self) -> float:
+        return float(sum(self.sent))
+
+    def to_dict(self):
+        return {"kind": self.kind, "perm": list(self.perm),
+                "size": float(self.size), "sent": list(self.sent)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(perm=tuple(int(j) for j in d["perm"]),
+                   size=float(d["size"]),
+                   sent=tuple(float(x) for x in d["sent"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class BarrierStage(PhaseBase):
+    """Barrier-synchronized flow set: GPU g sends ``sizes[g]`` bytes to GPU
+    ``dsts[g]``; the stage completes when the slowest flow does."""
+
+    kind: ClassVar[str] = "barrier"
+    sizes: np.ndarray  # (n_gpus,)
+    dsts: np.ndarray   # (n_gpus,) destination GPU index per source GPU
+
+    def _same_server(self, cluster: ClusterSpec) -> np.ndarray:
+        m = cluster.m_gpus
+        src = np.arange(len(self.sizes))
+        return (src // m) == (self.dsts.astype(np.int64) // m)
+
+    def payload(self, cluster):
+        same = self._same_server(cluster)
+        return (float(self.sizes[~same].sum()),
+                float(self.sizes[same].sum()))
+
+    def to_dict(self):
+        return {"kind": self.kind, "sizes": _listify(self.sizes),
+                "dsts": [int(j) for j in self.dsts]}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(sizes=_np2d(d["sizes"]),
+                   dsts=np.asarray(d["dsts"], dtype=np.int64))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class FanOutBurst(PhaseBase):
+    """All flows of a GPU-level matrix launched at once: receiver NICs
+    fair-share and collapse under incast; intra-server traffic rides the
+    fast fabric concurrently."""
+
+    kind: ClassVar[str] = "fanout_burst"
+    matrix: np.ndarray  # (n_gpus, n_gpus)
+
+    def payload(self, cluster):
+        n, m = cluster.n_servers, cluster.m_gpus
+        blk = self.matrix.reshape(n, m, n, m)
+        intra = float(sum(blk[a, :, a, :].sum() for a in range(n)))
+        return float(self.matrix.sum()) - intra, intra
+
+    def to_dict(self):
+        return {"kind": self.kind, "matrix": _listify(self.matrix)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(matrix=_np2d(d["matrix"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class RailStage(PhaseBase):
+    """Rail-aligned inter-server phase: NIC i of server a carries
+    ``send[a, i]`` outbound / ``recv[a, i]`` inbound bytes, progressing in
+    ``n_rounds`` rotation rounds (one wakeup each).  The max-loaded rail is
+    the straggler."""
+
+    kind: ClassVar[str] = "rail"
+    send: np.ndarray  # (n_servers, m_gpus)
+    recv: np.ndarray  # (n_servers, m_gpus)
+    n_rounds: int
+
+    def payload(self, cluster):
+        return float(self.send.sum()), 0.0
+
+    def to_dict(self):
+        return {"kind": self.kind, "send": _listify(self.send),
+                "recv": _listify(self.recv), "n_rounds": int(self.n_rounds)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(send=_np2d(d["send"]), recv=_np2d(d["recv"]),
+                   n_rounds=int(d["n_rounds"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class BoundStage(PhaseBase):
+    """Analytic Theorem-1 phase: ``bound_bytes`` (the max line sum of the
+    server matrix) crossing the aggregate per-server NIC bandwidth.
+    ``inter_total`` records the genuine inter-server bytes represented."""
+
+    kind: ClassVar[str] = "bound"
+    bound_bytes: float
+    inter_total: float
+
+    def payload(self, cluster):
+        return float(self.inter_total), 0.0
+
+    def to_dict(self):
+        return {"kind": self.kind, "bound_bytes": float(self.bound_bytes),
+                "inter_total": float(self.inter_total)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(bound_bytes=float(d["bound_bytes"]),
+                   inter_total=float(d["inter_total"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class RedistributePhase(PhaseBase):
+    """Pipeline-tail intra phase: ``bytes_per_gpu`` bytes per GPU moved over
+    the intra fabric after the last inter stage (auxiliary movement)."""
+
+    kind: ClassVar[str] = "redistribute"
+    bytes_per_gpu: float
+    charge_alpha: bool = True
+
+    def to_dict(self):
+        return {"kind": self.kind, "bytes_per_gpu": float(self.bytes_per_gpu),
+                "charge_alpha": bool(self.charge_alpha)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(bytes_per_gpu=float(d["bytes_per_gpu"]),
+                   charge_alpha=bool(d["charge_alpha"]))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class IntraOverlapPhase(PhaseBase):
+    """Per-server local traffic S_i spread over the server's intra fabric,
+    overlapped with the inter phase: only the residual beyond the inter
+    phase's duration is charged."""
+
+    kind: ClassVar[str] = "intra_overlap"
+    per_server: np.ndarray  # (n_servers,) S_i bytes
+
+    def payload(self, cluster):
+        return 0.0, float(self.per_server.sum())
+
+    def to_dict(self):
+        return {"kind": self.kind, "per_server": _listify(self.per_server)}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(per_server=_np2d(d["per_server"]))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Plan:
+    """A synthesized All-to-All schedule, decoupled from any timing model.
+
+    Attributes:
+      algorithm: registry name of the scheduler that produced this plan.
+      cluster: the two-tier cluster the plan targets.
+      phases: ordered typed phases (see module docstring).
+      synth_seconds: wall-clock schedule-synthesis time (paper Fig 17a).
+      extra_memory_bytes: staging buffers beyond the universal 2x send/recv
+        footprint (FLASH's load-balance + redistribute staging, Fig 17b).
+      accounts_intra: whether this plan explicitly schedules the workload's
+        intra-server bytes (validate() only checks intra conservation then).
+      fingerprint: traffic-matrix fingerprint of the source workload.
+    """
+
+    algorithm: str
+    cluster: ClusterSpec
+    phases: Tuple[PhaseBase, ...]
+    synth_seconds: float = 0.0
+    extra_memory_bytes: float = 0.0
+    accounts_intra: bool = True
+    fingerprint: Optional[str] = None
+
+    @property
+    def stages(self) -> Tuple[PhaseBase, ...]:
+        """The inter-server stage phases, in execution order."""
+        return tuple(p for p in self.phases if isinstance(
+            p, (PermutationStage, BarrierStage, FanOutBurst, RailStage,
+                BoundStage)))
+
+    @property
+    def n_stages(self) -> int:
+        total = 0
+        for p in self.stages:
+            total += p.n_rounds if isinstance(p, RailStage) else 1
+        return total
+
+    @property
+    def inter_bytes(self) -> float:
+        """Genuine payload bytes crossing the inter-server network."""
+        return float(sum(p.payload(self.cluster)[0] for p in self.phases))
+
+    # -- serialization --------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "algorithm": self.algorithm,
+            "cluster": dataclasses.asdict(self.cluster),
+            "phases": [p.to_dict() for p in self.phases],
+            "synth_seconds": float(self.synth_seconds),
+            "extra_memory_bytes": float(self.extra_memory_bytes),
+            "accounts_intra": bool(self.accounts_intra),
+            "fingerprint": self.fingerprint,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Plan":
+        phases = []
+        for pd in d["phases"]:
+            try:
+                phase_cls = PHASE_KINDS[pd["kind"]]
+            except KeyError:
+                raise PlanValidationError(
+                    f"unknown phase kind {pd['kind']!r}; known: "
+                    f"{sorted(PHASE_KINDS)}")
+            phases.append(phase_cls.from_dict(pd))
+        return cls(
+            algorithm=d["algorithm"],
+            cluster=ClusterSpec(**d["cluster"]),
+            phases=tuple(phases),
+            synth_seconds=float(d["synth_seconds"]),
+            extra_memory_bytes=float(d["extra_memory_bytes"]),
+            accounts_intra=bool(d["accounts_intra"]),
+            fingerprint=d.get("fingerprint"),
+        )
+
+    # -- validation -----------------------------------------------------
+
+    def validate(self, w: Workload, rtol: float = 1e-6) -> None:
+        """Check structure and byte conservation against the workload.
+
+        Raises PlanValidationError if the plan's inter-server stages do not
+        collectively carry exactly the workload's inter-server bytes (and,
+        when ``accounts_intra``, its intra-server bytes too), or if any
+        permutation stage has incast (two senders per receiver) or
+        self-traffic.
+        """
+        if w.cluster != self.cluster:
+            raise PlanValidationError(
+                f"plan targets {self.cluster}, workload runs on {w.cluster}")
+        for p in self.phases:
+            if isinstance(p, PermutationStage):
+                live = [j for j in p.perm if j >= 0]
+                if len(live) != len(set(live)):
+                    raise PlanValidationError(
+                        f"permutation stage has incast: {p.perm}")
+                if any(i == j for i, j in enumerate(p.perm)):
+                    raise PlanValidationError(
+                        f"permutation stage has self-traffic: {p.perm}")
+                if p.size < 0 or any(s < 0 or s > p.size * (1 + rtol)
+                                     for s in p.sent):
+                    raise PlanValidationError(
+                        "permutation stage payload exceeds slot size")
+
+        t_server, s_intra = server_reduce(w.matrix, self.cluster.m_gpus)
+        inter_expected = float(t_server.sum())
+        intra_expected = float(s_intra.sum())
+        inter_carried = 0.0
+        intra_carried = 0.0
+        for p in self.phases:
+            i, s = p.payload(self.cluster)
+            inter_carried += i
+            intra_carried += s
+
+        scale = max(inter_expected, intra_expected, 1.0)
+        if abs(inter_carried - inter_expected) > rtol * scale:
+            raise PlanValidationError(
+                f"inter-server bytes not conserved: plan carries "
+                f"{inter_carried:.6g}, workload has {inter_expected:.6g}")
+        if self.accounts_intra and \
+                abs(intra_carried - intra_expected) > rtol * scale:
+            raise PlanValidationError(
+                f"intra-server bytes not conserved: plan carries "
+                f"{intra_carried:.6g}, workload has {intra_expected:.6g}")
+
+
+# -- synthesis caching ----------------------------------------------------
+
+def traffic_fingerprint(w: Workload, algorithm: str = "") -> str:
+    """Stable fingerprint of (traffic matrix, cluster, algorithm).
+
+    Dynamic MoE traffic changes every iteration but frequently repeats
+    signatures (hot expert sets recur across steps); an exact content hash
+    is what lets PlanCache skip re-synthesis on repeats while never serving
+    a stale plan for different traffic.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    mat = np.ascontiguousarray(w.matrix, dtype=np.float64)
+    h.update(str(mat.shape).encode())
+    h.update(mat.tobytes())
+    c = w.cluster
+    h.update(repr((c.n_servers, c.m_gpus, c.b_intra, c.b_inter, c.alpha,
+                   c.intra_topology, algorithm)).encode())
+    return h.hexdigest()
+
+
+class PlanCache:
+    """LRU cache of synthesized Plans keyed by traffic fingerprint.
+
+    The paper's synthesis is already microseconds-cheap, but at MoE serving
+    rates (thousands of iterations/second across layers) even that adds up
+    -- and expert-routing signatures repeat across iterations.  ``lookup``
+    /``get_or_synthesize`` skip re-synthesis on a repeated fingerprint and
+    expose hit/miss counters for the reuse-rate telemetry.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._store: "OrderedDict[str, Plan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, key: str) -> Optional[Plan]:
+        plan = self._store.get(key)
+        if plan is not None:
+            self._store.move_to_end(key)
+            self.hits += 1
+        else:
+            self.misses += 1
+        return plan
+
+    def insert(self, key: str, plan: Plan) -> None:
+        self._store[key] = plan
+        self._store.move_to_end(key)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+
+    def get_or_synthesize(self, scheduler, w: Workload) -> Plan:
+        """Return the cached Plan for (w, scheduler) or synthesize + cache."""
+        key = traffic_fingerprint(w, scheduler.name)
+        plan = self.lookup(key)
+        if plan is None:
+            plan = scheduler.synthesize(w, fingerprint=key)
+            self.insert(key, plan)
+        return plan

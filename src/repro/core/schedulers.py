@@ -1,43 +1,327 @@
-"""All-to-All schedulers: FLASH and the paper's baselines.
+"""All-to-All schedulers: FLASH and the paper's baselines, as Plan synthesis.
 
-Every scheduler consumes a GPU-level ``Workload`` and produces a ``Plan`` that
-the alpha-beta simulator (simulator.py) can time.  ``flash_schedule`` is the
-paper's contribution: the three-phase, two-tier schedule whose inter-server
-stage list comes from the Birkhoff decomposition of the server-level matrix.
+Every scheduler is a ``Scheduler`` subclass behind the ``register_scheduler``
+registry.  ``Scheduler.synthesize`` consumes a GPU-level ``Workload`` and
+produces a scheduler-agnostic ``Plan`` (core/plan.py) that the single
+generic alpha-beta executor (simulator.py) times -- adding an algorithm
+means adding one class here, never forking the simulator.
 
-Baselines (paper section 6.1):
-  * FanOut     -- RCCL default: every GPU transmits to all peers at once.
-  * SpreadOut  -- MPI: N-1 barrier-synchronized stages, stage k pairs
-                  g -> (g + k) mod N.
-  * Hierarchical -- MSCCL-style rail-aligned: GPU i of each server aggregates
-                  local traffic for rail-i peers, then ships it over NIC i.
-  * LP bound   -- Theorem 1 optimal completion time (not executable, used as
-                  the 'optimal' line in every figure).
+  * flash        -- the paper's contribution: intra load balance, then the
+                    ascending Birkhoff stage list of the server-level
+                    matrix (PermutationStages), redistribute tail hidden
+                    under the pipeline.
+  * fanout       -- RCCL default: every GPU transmits to all peers at once
+                    (one FanOutBurst; incast is the burst's property).
+  * spreadout    -- MPI: N-1 barrier-synchronized stages, stage k pairs
+                    g -> (g + k) mod N (BarrierStages; stragglers are the
+                    barrier's property).
+  * hierarchical -- MSCCL-style rail-aligned: GPU i of each server
+                    aggregates local traffic for rail-i peers, then ships
+                    it over NIC i (gather head + RailStage + scatter tail).
+  * optimal      -- Theorem 1 bound (BoundStage; the 'optimal' line in
+                    every figure).
+
+``flash_schedule`` survives as a numeric-parity shim returning the legacy
+``FlashPlan`` view of the synthesized Plan.
 """
 
 from __future__ import annotations
 
+import abc
 import dataclasses
 import time
-from typing import List, Optional
+from typing import ClassVar, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
 from .birkhoff import Stage, birkhoff_decompose, max_line_sum
+from .plan import (
+    BarrierStage,
+    BoundStage,
+    FanOutBurst,
+    IntraOverlapPhase,
+    LoadBalancePhase,
+    PermutationStage,
+    Plan,
+    RailStage,
+    RedistributePhase,
+    traffic_fingerprint,
+)
 from .traffic import ClusterSpec, Workload, server_reduce
 
 __all__ = [
+    "Scheduler",
+    "register_scheduler",
+    "get_scheduler",
+    "available_schedulers",
+    "SCHEDULERS",
+    "FlashScheduler",
+    "FanOutScheduler",
+    "SpreadOutScheduler",
+    "HierarchicalScheduler",
+    "OptimalScheduler",
     "FlashPlan",
     "flash_schedule",
     "spreadout_stages",
     "hierarchical_nic_loads",
+    "optimal_completion_time",
     "synthesis_time",
 ]
 
 
+# -- registry --------------------------------------------------------------
+
+SCHEDULERS: Dict[str, Type["Scheduler"]] = {}
+
+
+def register_scheduler(cls: Type["Scheduler"]) -> Type["Scheduler"]:
+    """Class decorator: registers ``cls`` under ``cls.name``."""
+    if not getattr(cls, "name", None):
+        raise ValueError(f"{cls.__name__} must define a class-level `name`")
+    SCHEDULERS[cls.name] = cls
+    return cls
+
+
+def get_scheduler(name: str) -> "Scheduler":
+    try:
+        return SCHEDULERS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; pick from {sorted(SCHEDULERS)}")
+
+
+def available_schedulers() -> List[str]:
+    return sorted(SCHEDULERS)
+
+
+class Scheduler(abc.ABC):
+    """Base class: synthesize a Plan from a Workload.
+
+    Subclasses implement ``plan_phases`` returning (phases,
+    extra_memory_bytes); the base wraps them into a Plan with synthesis
+    wall-time (the paper's 'scheduling time' metric, Fig 17a) and the
+    traffic fingerprint used by PlanCache.
+    """
+
+    name: ClassVar[str] = ""
+    accounts_intra: ClassVar[bool] = True
+
+    @abc.abstractmethod
+    def plan_phases(self, w: Workload) -> Tuple[tuple, float]:
+        ...
+
+    def synthesize(self, w: Workload,
+                   fingerprint: Optional[str] = None) -> Plan:
+        t0 = time.perf_counter()
+        phases, extra_mem = self.plan_phases(w)
+        synth = time.perf_counter() - t0
+        # Fingerprint hashing (O(matrix bytes)) stays outside the timed
+        # window: synth_seconds is the paper's Fig 17a synthesis metric.
+        if fingerprint is None:
+            fingerprint = traffic_fingerprint(w, self.name)
+        return Plan(
+            algorithm=self.name,
+            cluster=w.cluster,
+            phases=tuple(phases),
+            synth_seconds=synth,
+            extra_memory_bytes=float(extra_mem),
+            accounts_intra=self.accounts_intra,
+            fingerprint=fingerprint,
+        )
+
+
+# -- FLASH -----------------------------------------------------------------
+
+@register_scheduler
+class FlashScheduler(Scheduler):
+    """Three-phase, two-tier FLASH schedule (paper 4.2-4.3).
+
+    This is the code path whose latency the paper reports as ~15-32 us on
+    small clusters; it is pure NumPy + Hopcroft-Karp and runs per iteration
+    on the host control thread (paper Fig 10).
+    """
+
+    name = "flash"
+    accounts_intra = True
+
+    def plan_phases(self, w: Workload):
+        cluster = w.cluster
+        n, m = cluster.n_servers, cluster.m_gpus
+        t_server, s_intra = server_reduce(w.matrix, m)
+
+        # Load-balance phase: per (server, gpu), how many bytes must this
+        # GPU shed so that every local GPU holds exactly T[a, j] / m for
+        # every dest j?
+        per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
+        target = t_server / m  # (n, n); diagonal 0
+        excess = np.maximum(per_gpu_dest - target[:, None, :], 0.0)
+        excess[np.arange(n), :, np.arange(n)] = 0.0  # intra not balanced
+        lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
+
+        stages = birkhoff_decompose(t_server, sort_ascending=True,
+                                    coalesce=True)
+        phases = [LoadBalancePhase(moved_per_gpu=lb_moved, charge_alpha=True)]
+        phases += [PermutationStage(perm=s.perm, size=s.size, sent=s.sent)
+                   for s in stages]
+        if stages:
+            phases.append(RedistributePhase(
+                bytes_per_gpu=stages[-1].size / m, charge_alpha=True))
+        phases.append(IntraOverlapPhase(per_server=s_intra))
+
+        inter_bytes = float(sum(s.real_bytes for s in stages))
+        # Staging beyond 2x send/recv: load-balance + redistribute buffers
+        # (the measured ~2.6x slope of Fig 17b).
+        extra_mem = float(lb_moved.sum()) + inter_bytes / m
+        return tuple(phases), extra_mem
+
+
+# -- FanOut ----------------------------------------------------------------
+
+@register_scheduler
+class FanOutScheduler(Scheduler):
+    """RCCL default: zero synthesis, one burst of the whole matrix."""
+
+    name = "fanout"
+    accounts_intra = True
+
+    def plan_phases(self, w: Workload):
+        return (FanOutBurst(matrix=np.array(w.matrix, dtype=np.float64)),), \
+            0.0
+
+
+# -- SpreadOut -------------------------------------------------------------
+
+@register_scheduler
+class SpreadOutScheduler(Scheduler):
+    """MPI SpreadOut: N-1 barrier stages, stage k pairs g -> (g+k) mod N."""
+
+    name = "spreadout"
+    accounts_intra = True
+
+    def plan_phases(self, w: Workload):
+        n_gpus = w.cluster.n_gpus
+        g = np.arange(n_gpus)
+        phases = []
+        for k, sizes in enumerate(spreadout_stages(w), start=1):
+            phases.append(BarrierStage(sizes=sizes, dsts=(g + k) % n_gpus))
+        return tuple(phases), 0.0
+
+
+# -- Hierarchical ----------------------------------------------------------
+
+@register_scheduler
+class HierarchicalScheduler(Scheduler):
+    """MSCCL-style rail-aligned hierarchical A2A.
+
+    Matches FLASH on balanced workloads (every rail carries the same bytes)
+    but cannot rebalance across NICs under skew -- the max-loaded rail
+    becomes the straggler.  Intra-server traffic is not scheduled (rides
+    the fabric for free in this model), so ``accounts_intra`` is False.
+    """
+
+    name = "hierarchical"
+    accounts_intra = False
+
+    def plan_phases(self, w: Workload):
+        c = w.cluster
+        send, recv, gather = hierarchical_nic_loads(w)
+        phases = (
+            LoadBalancePhase(moved_per_gpu=gather, charge_alpha=False),
+            RailStage(send=send, recv=recv, n_rounds=c.n_servers - 1),
+            # Scatter at the receiver pipelines with inter arrivals;
+            # charge tail only.
+            RedistributePhase(
+                bytes_per_gpu=float(recv.max(initial=0.0)) / max(c.m_gpus, 1),
+                charge_alpha=False),
+        )
+        return phases, float(gather.sum())
+
+
+# -- Optimal (Theorem 1) ---------------------------------------------------
+
+@register_scheduler
+class OptimalScheduler(Scheduler):
+    """Theorem 1 lower bound: max line sum of the server matrix over the
+    aggregate per-server NIC bandwidth.  Not executable on hardware; used
+    as the 'optimal' line in every figure."""
+
+    name = "optimal"
+    accounts_intra = False
+
+    def plan_phases(self, w: Workload):
+        t_server = w.server_matrix()
+        return (BoundStage(bound_bytes=max_line_sum(t_server),
+                           inter_total=float(t_server.sum())),), 0.0
+
+
+# -- synthesis helpers (vectorized hot paths) ------------------------------
+
+def spreadout_stages(w: Workload) -> List[np.ndarray]:
+    """SpreadOut: stage k (k = 1..N-1) pairs GPU g with GPU (g + k) mod N.
+
+    Returns per-stage (N,) arrays of flow sizes; flow g in stage k goes
+    g -> (g + k) mod N.  One vectorized gather builds all N-1 stages.
+    """
+    n_gpus = w.cluster.n_gpus
+    g = np.arange(n_gpus)
+    k = np.arange(1, n_gpus)[:, None]
+    sizes = w.matrix[g[None, :], (g[None, :] + k) % n_gpus]  # (N-1, N)
+    return list(sizes)
+
+
+def hierarchical_nic_loads(w: Workload):
+    """MSCCL-style rail-aligned aggregation: per-NIC send/recv byte loads.
+
+    GPU i of server a aggregates (intra-server gather) all local bytes whose
+    destination is GPU i of any remote server, then ships it over NIC i to
+    the rail peer.  Returns (send_loads, recv_loads, gather_bytes) each of
+    shape (n_servers, m).  Fully vectorized (synthesis-speed hot path).
+    """
+    c = w.cluster
+    n, m = c.n_servers, c.m_gpus
+    blk = w.matrix.reshape(n, m, n, m)          # [a, g, b, h]
+    ar = np.arange(n)
+    per_rail = blk.sum(axis=1)                  # [a, b, i]: over local srcs
+    diag_rail = per_rail[ar, ar, :]             # [a, i]: own-server block
+    send = per_rail.sum(axis=1) - diag_rail     # inter bytes NIC (a, i) ships
+    recv = per_rail.sum(axis=0) - diag_rail     # inter bytes NIC (b, i) takes
+    own_abi = np.einsum("aibi->abi", blk)       # blk[a, i, b, i]
+    own = own_abi.sum(axis=1) - own_abi[ar, ar, :]  # GPU i's own rail bytes
+    gather = send - own                         # arriving from local peers
+    return send, recv, gather
+
+
+def optimal_completion_time(w: Workload) -> float:
+    """Theorem 1: max line sum of the server matrix over aggregate NIC bw."""
+    c = w.cluster
+    t_server = w.server_matrix()
+    return max_line_sum(t_server) / (c.m_gpus * c.b_inter)
+
+
+def synthesis_time(
+    n_servers: int,
+    m_gpus: int = 8,
+    seed: int = 0,
+    workload: Optional[Workload] = None,
+) -> float:
+    """Measure FLASH schedule-synthesis wall time for a random workload.
+
+    Used by benchmarks/fig17_overhead.py to reproduce the scheduling-time
+    claim (us-scale vs TACCL's minutes-to-hours).
+    """
+    from .traffic import random_workload
+
+    if workload is None:
+        cluster = ClusterSpec(n_servers=n_servers, m_gpus=m_gpus)
+        workload = random_workload(cluster, mean_size=1 << 20, seed=seed)
+    return FlashScheduler().synthesize(workload).synth_seconds
+
+
+# -- legacy FlashPlan shim -------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class FlashPlan:
-    """Output of FLASH schedule synthesis for one traffic matrix.
+    """Legacy view of a FLASH Plan (pre-IR API, kept for back-compat).
 
     Attributes:
       stages: Birkhoff stages over the *server-level* matrix, ascending size
@@ -48,8 +332,7 @@ class FlashPlan:
       redistribute_tail: bytes/GPU redistributed after the *last* stage (the
         un-hidden pipeline tail).
       intra_bytes: S_i per server, overlapped with the first inter stage.
-      synth_seconds: wall-clock time spent computing this plan (the paper's
-        'scheduling time' metric, Fig 17a).
+      synth_seconds: wall-clock time spent computing this plan.
     """
 
     cluster: ClusterSpec
@@ -71,104 +354,23 @@ class FlashPlan:
     def stage_sizes(self) -> np.ndarray:
         return np.array([s.size for s in self.stages])
 
+    @classmethod
+    def from_plan(cls, plan: Plan) -> "FlashPlan":
+        if plan.algorithm != "flash":
+            raise ValueError(f"not a flash plan: {plan.algorithm!r}")
+        stages = [Stage(perm=p.perm, size=p.size, sent=p.sent)
+                  for p in plan.phases if isinstance(p, PermutationStage)]
+        lb = next(p.moved_per_gpu for p in plan.phases
+                  if isinstance(p, LoadBalancePhase))
+        tail = next((p.bytes_per_gpu for p in plan.phases
+                     if isinstance(p, RedistributePhase)), 0.0)
+        s_intra = next(p.per_server for p in plan.phases
+                       if isinstance(p, IntraOverlapPhase))
+        return cls(cluster=plan.cluster, stages=stages, lb_moved_per_gpu=lb,
+                   redistribute_tail=tail, intra_bytes=s_intra,
+                   synth_seconds=plan.synth_seconds)
+
 
 def flash_schedule(w: Workload) -> FlashPlan:
-    """Synthesize the complete FLASH plan for a workload.
-
-    This is the code path whose latency the paper reports as ~15-32 us on
-    small clusters; it is pure NumPy + Hopcroft-Karp and runs per iteration
-    on the host control thread (paper Fig 10).
-    """
-    t0 = time.perf_counter()
-    cluster = w.cluster
-    n, m = cluster.n_servers, cluster.m_gpus
-    t_server, s_intra = server_reduce(w.matrix, m)
-
-    # Load-balance phase: per (server, gpu), how many bytes must this GPU
-    # shed so that every local GPU holds exactly T[a, j] / m for every dest j?
-    per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
-    target = t_server / m  # (n, n); diagonal 0
-    excess = np.maximum(per_gpu_dest - target[:, None, :], 0.0)
-    for a in range(n):
-        excess[a, :, a] = 0.0  # intra-server traffic is not load balanced
-    lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
-
-    stages = birkhoff_decompose(t_server, sort_ascending=True, coalesce=True)
-    tail = stages[-1].size / m if stages else 0.0
-    synth = time.perf_counter() - t0
-    return FlashPlan(
-        cluster=cluster,
-        stages=stages,
-        lb_moved_per_gpu=lb_moved,
-        redistribute_tail=tail,
-        intra_bytes=s_intra,
-        synth_seconds=synth,
-    )
-
-
-def spreadout_stages(w: Workload) -> List[np.ndarray]:
-    """SpreadOut: stage k (k = 1..N-1) pairs GPU g with GPU (g + k) mod N.
-
-    Returns per-stage (N,) arrays of flow sizes; flow g in stage k goes
-    g -> (g + k) mod N.
-    """
-    n_gpus = w.cluster.n_gpus
-    out = []
-    for k in range(1, n_gpus):
-        sizes = np.array(
-            [w.matrix[g, (g + k) % n_gpus] for g in range(n_gpus)])
-        out.append(sizes)
-    return out
-
-
-def hierarchical_nic_loads(w: Workload):
-    """MSCCL-style rail-aligned aggregation: per-NIC send/recv byte loads.
-
-    GPU i of server a aggregates (intra-server gather) all local bytes whose
-    destination is GPU i of any remote server, then ships them over NIC i to
-    the rail peer.  Returns (send_loads, recv_loads, gather_bytes) each of
-    shape (n_servers, m).
-    """
-    c = w.cluster
-    n, m = c.n_servers, c.m_gpus
-    blk = w.matrix.reshape(n, m, n, m)  # [a, g, b, h]
-    send = np.zeros((n, m))
-    recv = np.zeros((n, m))
-    gather = np.zeros((n, m))
-    for a in range(n):
-        for i in range(m):
-            inter = blk[a, :, :, i].sum() - blk[a, :, a, i].sum()
-            send[a, i] = inter
-            own = blk[a, i, :, i].sum() - blk[a, i, a, i]
-            gather[a, i] = inter - own  # bytes arriving from local peers
-    for b in range(n):
-        for i in range(m):
-            recv[b, i] = blk[:, :, b, i].sum() - blk[b, :, b, i].sum()
-    return send, recv, gather
-
-
-def synthesis_time(
-    n_servers: int,
-    m_gpus: int = 8,
-    seed: int = 0,
-    workload: Optional[Workload] = None,
-) -> float:
-    """Measure FLASH schedule-synthesis wall time for a random workload.
-
-    Used by benchmarks/fig17_overhead.py to reproduce the scheduling-time
-    claim (us-scale vs TACCL's minutes-to-hours).
-    """
-    from .traffic import random_workload
-
-    if workload is None:
-        cluster = ClusterSpec(n_servers=n_servers, m_gpus=m_gpus)
-        workload = random_workload(cluster, mean_size=1 << 20, seed=seed)
-    plan = flash_schedule(workload)
-    return plan.synth_seconds
-
-
-def optimal_completion_time(w: Workload) -> float:
-    """Theorem 1: max line sum of the server matrix over aggregate NIC bw."""
-    c = w.cluster
-    t_server = w.server_matrix()
-    return max_line_sum(t_server) / (c.m_gpus * c.b_inter)
+    """Back-compat shim: synthesize FLASH and return the legacy view."""
+    return FlashPlan.from_plan(FlashScheduler().synthesize(w))

@@ -1,38 +1,62 @@
-"""Alpha-beta cost-model simulator for All-to-All schedules (paper 6.3).
+"""Generic alpha-beta plan executor (paper 6.3).
 
-Each transfer costs ``alpha + bytes / bandwidth``; concurrent transfers on a
-shared resource (a NIC, an intra-server fabric) divide its bandwidth.  The
-simulator times every scheduler in schedulers.py and reports the paper's
-figure of merit, *algorithmic bandwidth*:
+One executor times *every* scheduler: it walks a scheduler-agnostic ``Plan``
+(core/plan.py) and interprets each typed phase under the alpha-beta cost
+model -- each transfer costs ``alpha + bytes / bandwidth``; concurrent
+transfers on a shared resource (a NIC, an intra-server fabric) divide its
+bandwidth.  Incast and straggler effects are properties of stage *types*,
+not algorithm names:
+
+  * PermutationStage -- incast-free/straggler-free; ascending consecutive
+    stages pipeline (stage k's redistribute hides under stage k+1's
+    transfer; the un-hidden residual is charged explicitly, so the Theorem 2
+    bound holds even when the intra fabric is slow -- ring topology,
+    Fig 16a).
+  * BarrierStage -- waits for its slowest flow (the straggler effect,
+    Fig 3b).
+  * FanOutBurst -- models incast collapse: once simultaneous inbound flow
+    bytes at a NIC exceed what switch buffers absorb, goodput degrades by
+    1 / (1 + gamma * (k - 1)) (retransmissions + queueing), matching the
+    ~91x degradation the paper measured for RCCL at 32 GPUs on large
+    balanced transfers (Fig 12a).  Size-weighted effective concurrency:
+    short flows drain early, so skew *reduces* collision frequency.
+  * RailStage -- the max-loaded rail is the straggler; one wakeup per
+    rotation round.
+  * BoundStage -- the Theorem 1 analytic bound.
+
+The figure of merit is *algorithmic bandwidth*:
 
     AlgoBW = total_bytes / completion_time / n_gpus      [bytes/s/GPU]
 
-FanOut additionally models incast collapse: once the simultaneous inbound
-flow count at a NIC exceeds what switch buffers absorb, goodput degrades by
-1 / (1 + gamma * (k - 1)) (retransmissions + queueing), matching the ~91x
-degradation the paper measured for RCCL at 32 GPUs on large balanced
-transfers (Fig 12a).
+``simulate(w, name)`` is the one-call pipeline: registry lookup ->
+synthesis (optionally via a PlanCache) -> execution.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Iterator, Mapping, Optional
 
 import numpy as np
 
-from .schedulers import (
-    FlashPlan,
-    flash_schedule,
-    hierarchical_nic_loads,
-    optimal_completion_time,
-    spreadout_stages,
+from .plan import (
+    BarrierStage,
+    BoundStage,
+    FanOutBurst,
+    IntraOverlapPhase,
+    LoadBalancePhase,
+    PermutationStage,
+    Plan,
+    PlanCache,
+    RailStage,
+    RedistributePhase,
 )
+from .schedulers import SCHEDULERS, get_scheduler
 from .traffic import Workload
 
-__all__ = ["SimResult", "simulate", "ALGORITHMS"]
+__all__ = ["SimResult", "simulate", "execute_plan", "ALGORITHMS"]
 
-# Incast model constants (FanOut only).
+# Incast model constants (FanOutBurst stages only).
 _INCAST_GAMMA = 4.0
 _INCAST_BUFFER_BYTES = 32e6  # per-receiver absorption before collapse
 
@@ -51,178 +75,194 @@ class SimResult:
         return self.algbw / 1e9
 
 
-def _result(w: Workload, name: str, t: float, breakdown, n_stages, synth,
-            mem) -> SimResult:
-    total = w.total_bytes
-    return SimResult(
-        algorithm=name,
-        completion_time=t,
-        algbw=total / t / w.cluster.n_gpus if t > 0 else float("inf"),
-        breakdown=dict(breakdown),
-        n_stages=n_stages,
-        synth_seconds=synth,
-        memory_bytes=mem,
-    )
+def _permutation_times(plan: Plan, sizes: np.ndarray) -> Dict[str, float]:
+    """Ascending Birkhoff stage pipeline (paper 4.3 / Theorem 2).
 
-
-def simulate_optimal(w: Workload) -> SimResult:
-    t = optimal_completion_time(w)
-    t = max(t, 1e-30)
-    return _result(w, "optimal", t, {"inter": t}, 1, 0.0,
-                   2.0 * w.total_bytes)
-
-
-def simulate_flash(w: Workload, plan: FlashPlan | None = None) -> SimResult:
-    """Time the three-phase FLASH pipeline (paper 4.3 / Theorem 2).
-
-    head:  load balance (intra A2A), not hidden.
-    inter: sum over ascending Birkhoff stages of alpha + l_k / (m * B2);
-           stage k's redistribute hides under stage k+1's transfer because
-           l_k <= l_{k+1} and B1 > B2 (Theorem 2 pipelining argument); any
-           residual is charged explicitly, so the bound holds even when the
-           intra fabric is slow (ring topology, Fig 16a).
-    tail:  the last stage's redistribute (pipeline tail).
-    intra: local traffic S_i overlaps the inter phase; only the residual
-           beyond the inter phase length is charged.
+    inter: sum over stages of alpha + l_k / (m * B2).
+    hidden_residual: stage k's redistribute must fit under stage k+1's
+      transfer because l_k <= l_{k+1} and B1 > B2 (Theorem 2 pipelining
+      argument); any excess is charged.
     """
-    c = w.cluster
-    if plan is None:
-        plan = flash_schedule(w)
+    c = plan.cluster
     m = c.m_gpus
     bw_intra = c.intra_a2a_bandwidth()
-    bw_path = c.intra_path_bandwidth()
-
-    head = (plan.lb_moved_per_gpu.max(initial=0.0) / bw_intra
-            + (c.alpha if plan.lb_moved_per_gpu.max(initial=0.0) > 0 else 0.0))
-
-    sizes = plan.stage_sizes()
     inter = 0.0
     hidden_residual = 0.0
     for k, l in enumerate(sizes):
         inter += c.alpha + l / (m * c.b_inter)
         if k + 1 < len(sizes):
-            # redistribute of stage k must fit under transfer of stage k+1
             redis = (l / m) / bw_intra
             nxt = sizes[k + 1] / (m * c.b_inter)
             hidden_residual += max(0.0, redis - nxt)
-    tail = ((sizes[-1] / m) / bw_intra + c.alpha) if len(sizes) else 0.0
-
-    # Local traffic S_i spreads over the m GPUs' intra fabric (FLASH
-    # balances it like everything else; Theorem 2's single-path placement
-    # is the worst-case bound, not the schedule's behaviour).
-    s_max = plan.intra_bytes.max(initial=0.0)
-    intra_t = (s_max / (m * bw_intra) + c.alpha) if s_max > 0 else 0.0
-    del bw_path
-    intra_residual = max(0.0, intra_t - inter)
-
-    t = head + inter + hidden_residual + tail + intra_residual
-    t = max(t, 1e-30)
-    # Memory: send + recv buffers (2x) plus staging for load balance and
-    # redistribute (the measured ~2.6x slope of Fig 17b).
-    mem = 2.0 * w.total_bytes + plan.lb_moved_per_gpu.sum() + plan.inter_bytes / m
-    return _result(
-        w, "flash", t,
-        {"head": head, "inter": inter, "hidden_residual": hidden_residual,
-         "tail": tail, "intra_residual": intra_residual},
-        plan.n_stages, plan.synth_seconds, mem)
+    return {"inter": inter, "hidden_residual": hidden_residual}
 
 
-def simulate_spreadout(w: Workload) -> SimResult:
-    """MPI SpreadOut: barrier-synchronized stages; each stage waits for its
-    slowest flow (the straggler effect, Fig 3b)."""
-    c = w.cluster
-    n_gpus = c.n_gpus
-    m = c.m_gpus
-    bw_path = c.intra_path_bandwidth()
-    t = 0.0
-    for k, sizes in enumerate(spreadout_stages(w), start=1):
-        shift = k
-        stage = 0.0
-        for g in range(n_gpus):
-            dst = (g + shift) % n_gpus
-            same_server = (g // m) == (dst // m)
-            bw = bw_path if same_server else c.b_inter
-            stage = max(stage, sizes[g] / bw)
-        if stage > 0:
-            t += c.alpha + stage
-    t = max(t, 1e-30)
-    return _result(w, "spreadout", t, {"inter": t}, n_gpus - 1, 0.0,
-                   2.0 * w.total_bytes)
-
-
-def simulate_fanout(w: Workload) -> SimResult:
-    """RCCL FanOut: everything at once; NICs fair-share; incast collapse
-    beyond buffer absorption."""
-    c = w.cluster
+def _fanout_time(plan: Plan, ph: FanOutBurst) -> float:
+    """One burst: receiver NICs fair-share + incast; sender uplinks bound;
+    intra traffic rides the fast fabric concurrently; one wakeup."""
+    c = plan.cluster
     n, m = c.n_servers, c.m_gpus
-    blk = w.matrix.reshape(n, m, n, m)
-    t = 0.0
-    for b in range(n):
-        for h in range(m):
-            flows = blk[:, :, b, h].copy()
-            flows[b, :] = 0.0  # intra rides the fast fabric
-            inbound = flows.sum()
-            # Size-weighted effective concurrency: short flows drain early,
-            # so skew *reduces* collision frequency (paper section 6.1.1's
-            # RCCL observation); balanced => equals the flow count.
-            fmax = flows.max()
-            senders = float(inbound / fmax) if fmax > 0 else 0.0
-            base = inbound / c.b_inter
-            if inbound > _INCAST_BUFFER_BYTES and senders > 1:
-                over = inbound - _INCAST_BUFFER_BYTES
-                eta = 1.0 / (1.0 + _INCAST_GAMMA * (senders - 1))
-                base = (_INCAST_BUFFER_BYTES / c.b_inter
-                        + over / (c.b_inter * eta))
-            t = max(t, base)
-    for a in range(n):  # sender uplinks (no incast on send side)
-        for g in range(m):
-            outbound = blk[a, g].sum() - blk[a, g, a].sum()
-            t = max(t, outbound / c.b_inter)
+    blk = ph.matrix.reshape(n, m, n, m)
+    # Zero the same-server sender rows per receiver: intra rides the fast
+    # fabric, not the NIC.
+    inter_flows = blk * (1.0 - np.eye(n))[:, None, :, None]
+    inbound = inter_flows.sum(axis=(0, 1))          # (n, m) per receiver NIC
+    fmax = inter_flows.max(axis=(0, 1), initial=0.0)
+    senders = np.divide(inbound, fmax, out=np.zeros_like(inbound),
+                        where=fmax > 0)
+    base = inbound / c.b_inter
+    collapse = (inbound > _INCAST_BUFFER_BYTES) & (senders > 1)
+    if collapse.any():
+        over = inbound - _INCAST_BUFFER_BYTES
+        eta = 1.0 / (1.0 + _INCAST_GAMMA * (senders - 1))
+        with np.errstate(divide="ignore", invalid="ignore"):
+            collapsed = (_INCAST_BUFFER_BYTES / c.b_inter
+                         + over / (c.b_inter * eta))
+        base = np.where(collapse, collapsed, base)
+    t = float(base.max(initial=0.0))
+    # Sender uplinks (no incast on the send side).
+    outbound = inter_flows.sum(axis=(2, 3))          # (n, m) per sender NIC
+    t = max(t, float(outbound.max(initial=0.0)) / c.b_inter)
     # Intra traffic rides the fast fabric concurrently.
-    intra_t = max(
-        (blk[a, g, a].sum() / c.intra_a2a_bandwidth()
-         for a in range(n) for g in range(m)),
-        default=0.0)
-    t = max(t, intra_t) + c.alpha
-    t = max(t, 1e-30)
-    return _result(w, "fanout", t, {"inter": t}, 1, 0.0, 2.0 * w.total_bytes)
+    intra_per_gpu = np.einsum("agah->ag", blk)       # (n, m)
+    t = max(t, float(intra_per_gpu.max(initial=0.0))
+            / c.intra_a2a_bandwidth())
+    return t + c.alpha
 
 
-def simulate_hierarchical(w: Workload) -> SimResult:
-    """MSCCL-style rail-aligned hierarchical A2A.
+def execute_plan(plan: Plan, w: Workload) -> SimResult:
+    """Time a Plan under the alpha-beta model.
 
-    Matches FLASH on balanced workloads (every rail carries the same bytes)
-    but cannot rebalance across NICs under skew -- the max-loaded rail
-    becomes the straggler.
+    Phase semantics are dispatched on phase *type* (see module docstring);
+    overlap phases (IntraOverlapPhase) are resolved against the inter
+    phase's duration after all stages are timed.  The breakdown always sums
+    to completion_time.
     """
-    c = w.cluster
-    send, recv, gather = hierarchical_nic_loads(w)
+    c = plan.cluster
+    m = c.m_gpus
     bw_intra = c.intra_a2a_bandwidth()
-    head = gather.max(initial=0.0) / bw_intra
-    inter = max(send.max(initial=0.0), recv.max(initial=0.0)) / c.b_inter
-    # Scatter at the receiver pipelines with inter arrivals; charge tail only.
-    tail = recv.max(initial=0.0) / max(c.m_gpus, 1) / bw_intra
-    t = head + inter + tail + c.alpha * max(c.n_servers - 1, 1)
-    t = max(t, 1e-30)
-    mem = 2.0 * w.total_bytes + gather.sum()
-    return _result(w, "hierarchical", t,
-                   {"head": head, "inter": inter, "tail": tail},
-                   c.n_servers - 1, 0.0, mem)
+    breakdown: Dict[str, float] = {}
+    n_stages = 0
+    overlap_phases = []
+
+    def add(key: str, dt: float) -> None:
+        breakdown[key] = breakdown.get(key, 0.0) + dt
+
+    perm_sizes = np.array([p.size for p in plan.phases
+                           if isinstance(p, PermutationStage)])
+    if len(perm_sizes):
+        for key, dt in _permutation_times(plan, perm_sizes).items():
+            add(key, dt)
+        n_stages += len(perm_sizes)
+
+    for ph in plan.phases:
+        if isinstance(ph, PermutationStage):
+            continue  # timed collectively above (pipelined group)
+        if isinstance(ph, LoadBalancePhase):
+            moved = float(ph.moved_per_gpu.max(initial=0.0))
+            head = moved / bw_intra
+            if ph.charge_alpha and moved > 0:
+                head += c.alpha
+            add("head", head)
+        elif isinstance(ph, BarrierStage):
+            same = (np.arange(len(ph.sizes)) // m) == (ph.dsts // m)
+            bw = np.where(same, c.intra_path_bandwidth(), c.b_inter)
+            stage = float((ph.sizes / bw).max(initial=0.0))
+            if stage > 0:
+                add("inter", c.alpha + stage)
+            n_stages += 1
+        elif isinstance(ph, FanOutBurst):
+            add("inter", _fanout_time(plan, ph))
+            n_stages += 1
+        elif isinstance(ph, RailStage):
+            add("inter", max(float(ph.send.max(initial=0.0)),
+                             float(ph.recv.max(initial=0.0))) / c.b_inter)
+            add("sync", c.alpha * max(ph.n_rounds, 1))
+            n_stages += ph.n_rounds
+        elif isinstance(ph, BoundStage):
+            add("inter", ph.bound_bytes / (m * c.b_inter))
+            n_stages += 1
+        elif isinstance(ph, RedistributePhase):
+            tail = ph.bytes_per_gpu / bw_intra
+            if ph.charge_alpha:
+                tail += c.alpha
+            add("tail", tail)
+        elif isinstance(ph, IntraOverlapPhase):
+            overlap_phases.append(ph)
+        else:
+            raise TypeError(f"executor cannot time phase {ph!r}")
+
+    # Local traffic S_i spreads over the m GPUs' intra fabric and overlaps
+    # the inter phase; only the residual beyond it is charged.
+    for ph in overlap_phases:
+        s_max = float(ph.per_server.max(initial=0.0))
+        intra_t = (s_max / (m * bw_intra) + c.alpha) if s_max > 0 else 0.0
+        add("intra_residual",
+            max(0.0, intra_t - breakdown.get("inter", 0.0)))
+
+    t = max(sum(breakdown.values()), 1e-30)
+    total = w.total_bytes
+    # Memory: send + recv buffers (2x) plus algorithm-specific staging.
+    mem = 2.0 * total + plan.extra_memory_bytes
+    return SimResult(
+        algorithm=plan.algorithm,
+        completion_time=t,
+        algbw=total / t / c.n_gpus if t > 0 else float("inf"),
+        breakdown=breakdown,
+        n_stages=n_stages,
+        synth_seconds=plan.synth_seconds,
+        memory_bytes=mem,
+    )
 
 
-ALGORITHMS = {
-    "optimal": simulate_optimal,
-    "flash": simulate_flash,
-    "spreadout": simulate_spreadout,
-    "fanout": simulate_fanout,
-    "hierarchical": simulate_hierarchical,
-}
+def simulate(
+    w: Workload,
+    algorithm: str,
+    *,
+    plan: Optional[Plan] = None,
+    cache: Optional[PlanCache] = None,
+) -> SimResult:
+    """Scheduler -> Plan -> Executor, in one call.
 
-
-def simulate(w: Workload, algorithm: str) -> SimResult:
-    try:
-        fn = ALGORITHMS[algorithm]
-    except KeyError:
+    Args:
+      w: the GPU-level workload.
+      algorithm: registry name (see available_schedulers()).
+      plan: pre-synthesized Plan to execute (skips synthesis entirely).
+      cache: optional PlanCache; on a repeated traffic fingerprint the
+        cached Plan is executed without re-synthesis (hit/miss counters on
+        the cache record the reuse rate).
+    """
+    if plan is None:
+        scheduler = get_scheduler(algorithm)
+        if cache is not None:
+            plan = cache.get_or_synthesize(scheduler, w)
+        else:
+            plan = scheduler.synthesize(w)
+    elif plan.algorithm != algorithm:
         raise ValueError(
-            f"unknown algorithm {algorithm!r}; pick from {sorted(ALGORITHMS)}")
-    return fn(w)
+            f"plan was synthesized by {plan.algorithm!r}, asked to "
+            f"execute as {algorithm!r}")
+    return execute_plan(plan, w)
+
+
+class _AlgorithmView(Mapping):
+    """Live name -> simulate-callable view over the scheduler registry
+    (back-compat for the seed's ALGORITHMS dict)."""
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(SCHEDULERS)
+
+    def __len__(self) -> int:
+        return len(SCHEDULERS)
+
+    def __getitem__(self, name: str):
+        if name not in SCHEDULERS:
+            raise KeyError(name)
+
+        def run(w: Workload, **kw) -> SimResult:
+            return simulate(w, name, **kw)
+
+        return run
+
+
+ALGORITHMS = _AlgorithmView()

@@ -1,0 +1,65 @@
+"""Back-compat shims for older jax releases (no new dependencies).
+
+The repo targets the modern jax API (``jax.shard_map``, ``lax.axis_size``,
+``AxisType``-typed meshes).  Older runtimes (e.g. 0.4.x) lack these names;
+this module installs equivalent aliases *only where missing*, so on a
+current jax it is a no-op.  Imported for effect by ``repro.comm``,
+``repro.models`` and ``repro.launch.mesh`` before any shimmed name is used.
+
+Shims:
+  * ``lax.axis_size(name)``    -> ``lax.psum(1, name)`` (static for a
+                                  static operand, so python-level stage
+                                  loops keep working).
+  * ``jax.shard_map(...)``     -> ``jax.experimental.shard_map.shard_map``
+                                  with the keyword translation
+                                  ``axis_names={...}`` (manual axes) ->
+                                  ``auto=frozenset(rest)`` and
+                                  ``check_vma`` -> ``check_rep``.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+
+def _axis_size(name) -> int:
+    # psum of a static scalar is evaluated statically by jax, yielding a
+    # concrete int usable in python control flow inside shard_map.
+    return lax.psum(1, name)
+
+
+def _shard_map_compat(f, mesh=None, in_specs=None, out_specs=None,
+                      axis_names=None, check_vma=None, **kwargs):
+    # Partial-manual lowering (`auto=...`) CHECK-crashes the SPMD
+    # partitioner in old XLA builds, so axes outside `axis_names` are made
+    # manual too instead of staying automatic.  That is semantically
+    # equivalent whenever the in/out specs never reference those axes
+    # (true for every call site in this repo: values are replicated over
+    # them inside the manual region), at the cost of losing GSPMD
+    # propagation for them inside the region.
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def install() -> None:
+    if not hasattr(lax, "axis_size"):
+        lax.axis_size = _axis_size
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pragma: no cover - pallas not bundled
+        return
+    # pltpu.TPUCompilerParams was renamed to pltpu.CompilerParams; the
+    # accepted kwargs (dimension_semantics, ...) are unchanged.
+    if not hasattr(pltpu, "CompilerParams") and \
+            hasattr(pltpu, "TPUCompilerParams"):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+install()

@@ -1,3 +1,5 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from .. import jax_compat  # noqa: F401  (installs shims on older jax)

@@ -99,6 +99,8 @@ def _with_sh(shape_tree, sh_tree):
 
 def _cell_costs(compiled) -> tuple:
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), pod_size=256)
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)

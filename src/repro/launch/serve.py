@@ -38,10 +38,16 @@ def serve_state_shapes(cfg: ModelConfig, mesh: Optional[Mesh],
             cache_shape, cache_shardings(cfg, mesh, cache_shape))
 
 
-def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh]):
-    """jit'd (params, cache, tokens [B], pos) -> (logits [B, V], cache)."""
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                    a2a_impl: Optional[str] = None):
+    """jit'd (params, cache, tokens [B], pos) -> (logits [B, V], cache).
+
+    ``a2a_impl`` selects the MoE dispatch schedule through the comm-layer
+    registry (flash | direct | hierarchical), defaulting to the config's.
+    """
     model = build_model(cfg)
-    dist = make_dist_context(cfg, mesh) if mesh is not None else None
+    dist = make_dist_context(cfg, mesh, a2a_impl) if mesh is not None \
+        else None
     rules = make_rules(cfg, mesh) if mesh is not None else None
 
     def serve_step(params, cache, tokens, pos):
@@ -53,10 +59,12 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh]):
     return jax.jit(serve_step, donate_argnums=(1,))
 
 
-def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                      a2a_impl: Optional[str] = None):
     """jit'd (params, batch) -> (logits, cache | aux)."""
     model = build_model(cfg)
-    dist = make_dist_context(cfg, mesh) if mesh is not None else None
+    dist = make_dist_context(cfg, mesh, a2a_impl) if mesh is not None \
+        else None
     rules = make_rules(cfg, mesh) if mesh is not None else None
 
     def prefill_step(params, batch):
@@ -69,15 +77,24 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh]):
 # -- CPU-scale batched-serving demo ------------------------------------------
 
 def main():
+    from ..comm.all_to_all import available_all_to_all_impls
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--a2a", default=None,
+                    choices=available_all_to_all_impls(),
+                    help="MoE All-to-All schedule (registry name); "
+                         "defaults to the arch config's a2a_impl")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.a2a:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, a2a_impl=args.a2a)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)

@@ -46,13 +46,24 @@ class TrainOptions:
                                      # activation memory, same math
 
 
-def make_dist_context(cfg: ModelConfig, mesh: Mesh) -> DistContext:
+def make_dist_context(cfg: ModelConfig, mesh: Mesh,
+                      a2a_impl: Optional[str] = None) -> DistContext:
+    """Build the DistContext; ``a2a_impl`` overrides the config's choice.
+
+    The implementation name is validated against the one comm-layer
+    registry (comm.all_to_all) so every entry point -- training, serving,
+    dry-run sweeps -- fails fast on a typo instead of inside shard_map.
+    """
+    from ..comm.all_to_all import all_to_all_by_name
+
+    impl = a2a_impl or cfg.a2a_impl
+    all_to_all_by_name(impl)  # raises ValueError on unknown impls
     return DistContext(
         mesh=mesh,
         dp_axes=dp_axes(mesh),
         slow_axis=slow_axis(mesh),
         ep_axes=choose_ep_axes(cfg, mesh),
-        a2a_impl=cfg.a2a_impl,
+        a2a_impl=impl,
     )
 
 

@@ -23,6 +23,8 @@ class DistContext:
     dp_axes: Tuple[str, ...]            # batch-sharded axes (manual in MoE island)
     slow_axis: Optional[str]            # inter-pod DCN axis ("pod"), if present
     ep_axes: Optional[Tuple[str, ...]]  # expert-parallel axes, slow-major
+    # Registry name consumed by comm.all_to_all.resolve_all_to_all (the one
+    # dispatch point for model code, launch/ and benchmarks).
     a2a_impl: str = "flash"             # flash | direct | hierarchical
 
     @property

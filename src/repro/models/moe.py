@@ -6,7 +6,9 @@ routing produces a token->expert traffic matrix that changes every step
 mesh axes.  When the EP axes include the slow ``pod`` axis, dispatch crosses
 DCN and the configured ``a2a_impl`` (flash | direct | hierarchical) decides
 the schedule -- the jit-integrated analogue of swapping RCCL's fanout for
-FLASH in Megatron-LM (paper section 5).
+FLASH in Megatron-LM (paper section 5).  Implementation selection happens
+in ``comm.all_to_all.resolve_all_to_all`` (one registry for model code,
+launch/ and benchmarks), never inline here.
 
 Static-shape contract: capacity-factor padding (standard TPU MoE practice)
 bounds every (source shard, expert) chunk at C tokens; overflow tokens are
@@ -28,8 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..comm.all_to_all import all_to_all_by_name, intra_all_to_all, \
-    rotation_all_to_all
+from ..comm.all_to_all import resolve_all_to_all
 from ..configs.registry import ModelConfig
 from .dist import DistContext
 from .layers import dense_init
@@ -139,18 +140,7 @@ def _moe_island(cfg: ModelConfig, dist: DistContext, x, router_w,
     buf = buf.reshape(g, e_loc * cap, d)
 
     if g > 1:
-        ep = dist.ep_axes
-        if dist.slow_axis in ep and len(ep) > 1:
-            fast = tuple(a for a in ep if a != dist.slow_axis)
-            a2a = partial(all_to_all_by_name(dist.a2a_impl),
-                          slow_axis=dist.slow_axis, fast_axes=fast)
-        elif ep == (dist.slow_axis,):
-            # Pure pod-axis exchange (mixtral: 8e over pod=2): the FLASH
-            # rotation schedule -- every device's DCN link carries one
-            # contiguous chunk per stage, incast-free by construction.
-            a2a = partial(rotation_all_to_all, axis=dist.slow_axis)
-        else:
-            a2a = partial(intra_all_to_all, fast_axes=ep)  # ICI only
+        a2a = resolve_all_to_all(dist)
         recv = a2a(buf)                                     # [G, E_loc*C, d]
     else:
         recv = buf
@@ -216,10 +206,9 @@ def _moe_pod_ep(cfg: ModelConfig, dist: DistContext, p: dict, x: jax.Array):
         halves DCN bytes at ~0.4% RMS payload error.  The paper's own
         principle -- spend fast-tier resources to shrink slow-tier bytes.
         """
-        def a2a(v):
-            if exchange_slow:
-                return rotation_all_to_all(v, axis=ep_axis)
-            return intra_all_to_all(v, fast_axes=(ep_axis,))
+        a2a = resolve_all_to_all(
+            slow_axis=ep_axis if exchange_slow else None,
+            ep_axes=(ep_axis,), impl=dist.a2a_impl)
 
         if not (cfg.quantized_dispatch and exchange_slow):
             return a2a(buf)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.kernels.a2a_pack import a2a_pack_op, a2a_pack_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_op

@@ -1,0 +1,301 @@
+"""Plan IR tests: serialization round-trip, byte conservation, PlanCache
+hit/miss behavior, and executor-vs-seed numeric parity on fixed seeds.
+
+GOLDEN holds completion times recorded from the seed repo's per-algorithm
+``simulate_*`` functions (pre-IR) on fixed-seed workloads; the unified
+Scheduler -> Plan -> executor pipeline must reproduce them to <= 1e-9
+relative error.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    FlashPlan,
+    Plan,
+    PlanCache,
+    PlanValidationError,
+    available_schedulers,
+    balanced_workload,
+    flash_schedule,
+    get_scheduler,
+    moe_workload,
+    random_workload,
+    simulate,
+    skewed_workload,
+    traffic_fingerprint,
+)
+from repro.core.plan import PermutationStage
+from repro.core.schedulers import hierarchical_nic_loads, spreadout_stages
+
+ALGOS = ("optimal", "flash", "spreadout", "fanout", "hierarchical")
+
+CLUSTERS = {
+    "c48": ClusterSpec(4, 8),
+    "c48a0": ClusterSpec(4, 8, alpha=0.0),
+    "c24ring": ClusterSpec(2, 4, intra_topology="ring"),
+    "c82sw": ClusterSpec(8, 2, b_intra=900e9 / 8, intra_topology="switch"),
+}
+
+
+def _workload(cluster, kind):
+    return {
+        "balanced": lambda: balanced_workload(cluster, 4 << 20),
+        "random": lambda: random_workload(cluster, 4 << 20, seed=1),
+        "skewed": lambda: skewed_workload(cluster, 4 << 20, 1.2, seed=2),
+        "moe": lambda: moe_workload(cluster, 8192, 4096, top_k=2, seed=3),
+    }[kind]()
+
+
+# Completion times recorded from the seed's per-algorithm simulators.
+GOLDEN = {
+    ("c48", "balanced", "optimal"): 0.00805306368,
+    ("c48", "balanced", "flash"): 0.008167961965714284,
+    ("c48", "balanced", "spreadout"): 0.010711873920000003,
+    ("c48", "balanced", "fanout"): 0.5134249222399999,
+    ("c48", "balanced", "hierarchical"): 0.008307758537142856,
+    ("c48", "random", "optimal"): 0.008636259163108565,
+    ("c48", "random", "flash"): 0.008854418181775264,
+    ("c48", "random", "spreadout"): 0.02015652024223573,
+    ("c48", "random", "fanout"): 0.45774545685473256,
+    ("c48", "random", "hierarchical"): 0.010574012297143453,
+    ("c48", "skewed", "optimal"): 0.014900139588591705,
+    ("c48", "skewed", "flash"): 0.016956171172464302,
+    ("c48", "skewed", "spreadout"): 0.2035175943392745,
+    ("c48", "skewed", "fanout"): 0.10731641099166422,
+    ("c48", "skewed", "hierarchical"): 0.08568716782783053,
+    ("c48", "moe", "optimal"): 0.0059109376,
+    ("c48", "moe", "flash"): 0.006041162742857143,
+    ("c48", "moe", "spreadout"): 0.0165580128,
+    ("c48", "moe", "fanout"): 0.9768271530234315,
+    ("c48", "moe", "hierarchical"): 0.01383514816,
+    ("c48a0", "balanced", "optimal"): 0.00805306368,
+    ("c48a0", "balanced", "flash"): 0.008127961965714286,
+    ("c48a0", "balanced", "spreadout"): 0.010401873920000002,
+    ("c48a0", "balanced", "fanout"): 0.51341492224,
+    ("c48a0", "balanced", "hierarchical"): 0.008277758537142856,
+    ("c48a0", "random", "optimal"): 0.008636259163108565,
+    ("c48a0", "random", "flash"): 0.008754418181775265,
+    ("c48a0", "random", "spreadout"): 0.01984652024223573,
+    ("c48a0", "random", "fanout"): 0.45773545685473255,
+    ("c48a0", "random", "hierarchical"): 0.010544012297143452,
+    ("c48a0", "skewed", "optimal"): 0.014900139588591705,
+    ("c48a0", "skewed", "flash"): 0.016856171172464303,
+    ("c48a0", "skewed", "spreadout"): 0.20320759433927443,
+    ("c48a0", "skewed", "fanout"): 0.10730641099166423,
+    ("c48a0", "skewed", "hierarchical"): 0.08565716782783053,
+    ("c48a0", "moe", "optimal"): 0.0059109376,
+    ("c48a0", "moe", "flash"): 0.005951162742857142,
+    ("c48a0", "moe", "spreadout"): 0.0162480128,
+    ("c48a0", "moe", "fanout"): 0.9768171530234315,
+    ("c48a0", "moe", "hierarchical"): 0.013805148159999999,
+    ("c24ring", "balanced", "optimal"): 0.00134217728,
+    ("c24ring", "balanced", "flash"): 0.00149324928,
+    ("c24ring", "balanced", "spreadout"): 0.0024188102400000003,
+    ("c24ring", "balanced", "fanout"): 0.00135217728,
+    ("c24ring", "balanced", "hierarchical"): 0.00148324928,
+    ("c24ring", "random", "optimal"): 0.00180864482600501,
+    ("c24ring", "random", "flash"): 0.002046083365372265,
+    ("c24ring", "random", "spreadout"): 0.0042844768042680555,
+    ("c24ring", "random", "fanout"): 0.0022314551772559953,
+    ("c24ring", "random", "hierarchical"): 0.0024467507592457094,
+    ("c24ring", "skewed", "optimal"): 0.002505884885756885,
+    ("c24ring", "skewed", "flash"): 0.003211466762756689,
+    ("c24ring", "skewed", "spreadout"): 0.008937634258458631,
+    ("c24ring", "skewed", "fanout"): 0.008085733872401787,
+    ("c24ring", "skewed", "hierarchical"): 0.007031137397242913,
+    ("c24ring", "moe", "optimal"): 0.00311615488,
+    ("c24ring", "moe", "flash"): 0.00345242688,
+    ("c24ring", "moe", "spreadout"): 0.0100594528,
+    ("c24ring", "moe", "fanout"): 0.06011224466897498,
+    ("c24ring", "moe", "hierarchical"): 0.00772131712,
+    ("c82sw", "balanced", "optimal"): 0.00469762048,
+    ("c82sw", "balanced", "flash"): 0.004852185884444444,
+    ("c82sw", "balanced", "spreadout"): 0.005183164800000002,
+    ("c82sw", "balanced", "fanout"): 0.11586388544000001,
+    ("c82sw", "balanced", "hierarchical"): 0.0052895783111111105,
+    ("c82sw", "random", "optimal"): 0.00521498836065357,
+    ("c82sw", "random", "flash"): 0.005845617481727996,
+    ("c82sw", "random", "spreadout"): 0.009279495598075341,
+    ("c82sw", "random", "fanout"): 0.12941442554699628,
+    ("c82sw", "random", "hierarchical"): 0.006913316762040524,
+    ("c82sw", "skewed", "optimal"): 0.013040125473442254,
+    ("c82sw", "skewed", "flash"): 0.015174575670347303,
+    ("c82sw", "skewed", "spreadout"): 0.04739191532143623,
+    ("c82sw", "skewed", "fanout"): 0.029698676522073017,
+    ("c82sw", "skewed", "hierarchical"): 0.025499356847760397,
+    ("c82sw", "moe", "optimal"): 0.01041907712,
+    ("c82sw", "moe", "flash"): 0.011099780195555558,
+    ("c82sw", "moe", "spreadout"): 0.020198117760000002,
+    ("c82sw", "moe", "fanout"): 0.8646337485726816,
+    ("c82sw", "moe", "hierarchical"): 0.02092970830222222,
+}
+
+
+def test_registry_has_all_five():
+    assert set(ALGOS) == set(available_schedulers())
+
+
+def test_unknown_algorithm_raises():
+    w = balanced_workload(CLUSTERS["c48"], 1 << 20)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        simulate(w, "no-such-algo")
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN), ids=lambda k: "-".join(k))
+def test_executor_matches_seed_numerics(key):
+    cn, wn, algo = key
+    w = _workload(CLUSTERS[cn], wn)
+    got = simulate(w, algo).completion_time
+    want = GOLDEN[key]
+    assert abs(got - want) <= 1e-9 * want, (key, got, want)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+@pytest.mark.parametrize("kind", ("balanced", "random", "skewed", "moe"))
+def test_plans_conserve_bytes(algo, kind):
+    w = _workload(CLUSTERS["c48"], kind)
+    get_scheduler(algo).synthesize(w).validate(w)
+
+
+def test_validation_catches_lost_bytes():
+    w = _workload(CLUSTERS["c48"], "random")
+    plan = get_scheduler("flash").synthesize(w)
+    # Halve one permutation stage's payload: conservation must fail.
+    broken = []
+    dropped = False
+    for p in plan.phases:
+        if not dropped and isinstance(p, PermutationStage):
+            p = PermutationStage(perm=p.perm, size=p.size,
+                                 sent=tuple(s / 2 for s in p.sent))
+            dropped = True
+        broken.append(p)
+    bad = Plan(algorithm=plan.algorithm, cluster=plan.cluster,
+               phases=tuple(broken), accounts_intra=plan.accounts_intra)
+    with pytest.raises(PlanValidationError, match="not conserved"):
+        bad.validate(w)
+
+
+def test_validation_catches_incast():
+    c = CLUSTERS["c48"]
+    w = _workload(c, "random")
+    stage = PermutationStage(perm=(1, 1, -1, -1), size=8.0,
+                             sent=(8.0, 8.0, 0.0, 0.0))
+    bad = Plan(algorithm="flash", cluster=c, phases=(stage,),
+               accounts_intra=False)
+    with pytest.raises(PlanValidationError, match="incast"):
+        bad.validate(w)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_plan_round_trips_through_json(algo):
+    w = _workload(CLUSTERS["c48"], "skewed")
+    plan = get_scheduler(algo).synthesize(w)
+    wire = json.dumps(plan.to_dict())
+    plan2 = Plan.from_dict(json.loads(wire))
+    assert plan2.to_dict() == plan.to_dict()
+    r1 = simulate(w, algo, plan=plan)
+    r2 = simulate(w, algo, plan=plan2)
+    assert r1.completion_time == r2.completion_time
+    assert r1.breakdown == r2.breakdown
+    assert r1.n_stages == r2.n_stages
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_breakdown_sums_to_completion(algo):
+    """Unified-executor invariant: the breakdown is a full account."""
+    w = _workload(CLUSTERS["c48"], "skewed")
+    r = simulate(w, algo)
+    assert np.isclose(sum(r.breakdown.values()), r.completion_time,
+                      rtol=1e-12)
+
+
+def test_plan_cache_hit_skips_synthesis():
+    cache = PlanCache()
+    c = CLUSTERS["c48"]
+    w = moe_workload(c, 8192, 4096, top_k=2, seed=7)
+    r1 = simulate(w, "flash", cache=cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    # Same traffic fingerprint next iteration: plan reused, not re-made.
+    w_again = moe_workload(c, 8192, 4096, top_k=2, seed=7)
+    r2 = simulate(w_again, "flash", cache=cache)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert r2.completion_time == r1.completion_time
+    key = traffic_fingerprint(w, "flash")
+    assert cache.lookup(key) is cache.lookup(key)  # same Plan object
+    # Shifted traffic: new fingerprint, fresh synthesis.
+    w_shift = moe_workload(c, 8192, 4096, top_k=2, seed=8)
+    simulate(w_shift, "flash", cache=cache)
+    assert cache.misses == 2
+
+
+def test_plan_cache_keyed_by_algorithm_and_cluster():
+    cache = PlanCache()
+    w = _workload(CLUSTERS["c48"], "random")
+    simulate(w, "flash", cache=cache)
+    simulate(w, "spreadout", cache=cache)  # same matrix, different algo
+    assert cache.misses == 2 and cache.hits == 0
+    w_ring = _workload(CLUSTERS["c24ring"], "random")
+    simulate(w_ring, "flash", cache=cache)  # same seed, different cluster
+    assert cache.misses == 3 and cache.hits == 0
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(capacity=2)
+    for seed in (0, 1, 2):
+        simulate(random_workload(CLUSTERS["c48"], 1 << 20, seed=seed),
+                 "flash", cache=cache)
+    assert len(cache) == 2
+    # seed=0 was evicted; re-simulating it is a miss again.
+    simulate(random_workload(CLUSTERS["c48"], 1 << 20, seed=0),
+             "flash", cache=cache)
+    assert cache.misses == 4 and cache.hits == 0
+
+
+def test_flash_schedule_shim_matches_plan():
+    w = _workload(CLUSTERS["c48"], "skewed")
+    legacy = flash_schedule(w)
+    plan = get_scheduler("flash").synthesize(w)
+    assert isinstance(legacy, FlashPlan)
+    assert legacy.n_stages == plan.n_stages
+    assert legacy.inter_bytes == pytest.approx(plan.inter_bytes, rel=1e-12)
+    np.testing.assert_allclose(
+        legacy.stage_sizes(),
+        [p.size for p in plan.phases if isinstance(p, PermutationStage)])
+
+
+def test_vectorized_spreadout_stages_matches_reference():
+    w = _workload(CLUSTERS["c48"], "random")
+    n_gpus = w.cluster.n_gpus
+    got = spreadout_stages(w)
+    assert len(got) == n_gpus - 1
+    for k, sizes in enumerate(got, start=1):
+        ref = np.array([w.matrix[g, (g + k) % n_gpus]
+                        for g in range(n_gpus)])
+        np.testing.assert_array_equal(sizes, ref)
+
+
+def test_vectorized_hierarchical_loads_match_reference():
+    w = _workload(CLUSTERS["c48"], "moe")
+    c = w.cluster
+    n, m = c.n_servers, c.m_gpus
+    blk = w.matrix.reshape(n, m, n, m)
+    send_ref = np.zeros((n, m))
+    recv_ref = np.zeros((n, m))
+    gather_ref = np.zeros((n, m))
+    for a in range(n):
+        for i in range(m):
+            inter = blk[a, :, :, i].sum() - blk[a, :, a, i].sum()
+            send_ref[a, i] = inter
+            own = blk[a, i, :, i].sum() - blk[a, i, a, i]
+            gather_ref[a, i] = inter - own
+    for b in range(n):
+        for i in range(m):
+            recv_ref[b, i] = blk[:, :, b, i].sum() - blk[b, :, b, i].sum()
+    send, recv, gather = hierarchical_nic_loads(w)
+    np.testing.assert_allclose(send, send_ref, rtol=1e-12)
+    np.testing.assert_allclose(recv, recv_ref, rtol=1e-12)
+    np.testing.assert_allclose(gather, gather_ref, rtol=1e-12)

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     ClusterSpec,

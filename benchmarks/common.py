@@ -1,19 +1,54 @@
-"""Shared benchmark utilities: CSV emission in `name,us_per_call,derived`."""
+"""Shared benchmark utilities: CSV emission in `name,us_per_call,derived`
+plus a machine-readable JSON export for the perf trajectory."""
 
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List
+
+BENCH_SCHEMA_VERSION = 1
 
 
 class Csv:
     def __init__(self):
         self.rows: List[str] = []
+        self.records: List[Dict] = []
 
     def emit(self, name: str, us_per_call: float, derived: str = ""):
         line = f"{name},{us_per_call:.3f},{derived}"
         self.rows.append(line)
+        self.records.append({
+            "name": name,
+            "us_per_call": float(us_per_call),
+            "derived": _parse_derived(derived),
+            "derived_raw": derived,
+        })
         print(line)
+
+    def to_json(self) -> Dict:
+        """Machine-readable snapshot (BENCH_*.json): schema-versioned so
+        successive CI runs accumulate a comparable perf trajectory."""
+        return {
+            "schema": BENCH_SCHEMA_VERSION,
+            "generated_unix": time.time(),
+            "rows": self.records,
+        }
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+
+def _parse_derived(derived: str) -> Dict[str, str]:
+    """Split the `k1=v1|k2=v2` derived column into a dict (best effort)."""
+    out: Dict[str, str] = {}
+    for part in derived.split("|"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
 
 
 def time_us(fn: Callable, repeats: int = 5, warmup: int = 1) -> float:

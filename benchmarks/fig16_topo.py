@@ -38,3 +38,7 @@ def run(csv: Csv):
         csv.emit(f"fig16.bw.{name}", flash.completion_time * 1e6,
                  f"ratio={b1 / b2:.1f}"
                  f"|opt_frac={flash.algbw / opt.algbw:.3f}")
+
+
+if __name__ == "__main__":
+    run(Csv())

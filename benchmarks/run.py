@@ -1,16 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Modules:
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``BENCH_*.json`` snapshot (``--json PATH``, default ``BENCH_latest.json``)
+so successive runs accumulate a perf trajectory.  Modules:
   fig12  AlgoBW vs transfer size (balanced/random/skewed) vs 4 baselines
   fig13  skew sweep + FLASH phase breakdown
   fig14  MoE end-to-end training speedup (EP degree, top-k)
   fig15  scale sweep (servers, GPUs/server)
   fig16  intra-server topology + bandwidth-ratio sweep
   fig17  scheduler synthesis time + memory overhead slope
+  hetero heterogeneous fabrics: degraded/failed/mixed NICs, oversubscription
   roofline  per-(arch x shape x mesh) terms from the dry-run sweep
 """
 
 from __future__ import annotations
+
+import argparse
 
 from . import (
     fig12_algbw,
@@ -19,17 +24,27 @@ from . import (
     fig15_scale,
     fig16_topo,
     fig17_overhead,
+    fig_hetero,
     roofline_table,
 )
 from .common import Csv
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--json", default="BENCH_latest.json", metavar="PATH",
+        help="write a machine-readable snapshot here ('' to disable)")
+    args = parser.parse_args(argv)
+
     csv = Csv()
     print("name,us_per_call,derived")
     for mod in (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
-                fig16_topo, fig17_overhead, roofline_table):
+                fig16_topo, fig17_overhead, fig_hetero, roofline_table):
         mod.run(csv)
+    if args.json:
+        csv.write_json(args.json)
+        print(f"# wrote {len(csv.records)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -248,6 +248,7 @@ def resolve_all_to_all(
     slow_axis: Optional[str] = None,
     ep_axes: Optional[Sequence[str]] = None,
     impl: str = "flash",
+    topology=None,
 ) -> Optional[Callable[[jax.Array], jax.Array]]:
     """Select the jit-integrated A2A schedule for an EP-axis layout.
 
@@ -265,12 +266,23 @@ def resolve_all_to_all(
       * EP is fast-only -> a plain intra all_to_all over ICI.
       * No EP axes -> None (no exchange needed).
 
+    ``impl="auto"`` resolves from the fabric: on a heterogeneous or
+    oversubscribed ``Topology`` (core/topology.py) the FLASH schedule's
+    load-balance phase aligns per-rail shares with real link capacities, so
+    auto picks ``flash``; on a homogeneous full-bisection fabric (or with
+    no topology information) auto picks ``direct`` -- one fused collective,
+    no balancing needed when every link is equal.
+
     Returns a unary ``buf -> buf`` callable, or None.
     """
     if dist is not None:
         slow_axis = dist.slow_axis
         ep_axes = dist.ep_axes
         impl = dist.a2a_impl
+        topology = getattr(dist, "topology", topology)
+    if impl == "auto":
+        hetero = topology is not None and not topology.is_homogeneous
+        impl = "flash" if hetero else "direct"
     # Fail fast on unknown impl names on every path, including the
     # rotation/ICI-only ones that do not dispatch through the registry.
     two_tier = all_to_all_by_name(impl)

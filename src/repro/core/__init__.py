@@ -35,6 +35,7 @@ from .schedulers import (
     synthesis_time,
 )
 from .simulator import ALGORITHMS, SimResult, execute_plan, simulate
+from .topology import ServerFabric, Topology
 from .traffic import (
     ClusterSpec,
     Workload,
@@ -76,6 +77,8 @@ __all__ = [
     "SimResult",
     "simulate",
     "execute_plan",
+    "ServerFabric",
+    "Topology",
     "ClusterSpec",
     "Workload",
     "balanced_workload",

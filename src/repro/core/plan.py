@@ -46,6 +46,7 @@ from typing import Any, ClassVar, Dict, Optional, Tuple
 
 import numpy as np
 
+from .topology import Topology
 from .traffic import ClusterSpec, Workload, server_reduce
 
 __all__ = [
@@ -252,18 +253,28 @@ class BoundStage(PhaseBase):
     kind: ClassVar[str] = "bound"
     bound_bytes: float
     inter_total: float
+    # Per-server max(row, col) line sums; lets the link-level executor bound
+    # each server against its own aggregate NIC capacity (heterogeneous
+    # fabrics).  None = legacy scalar form.
+    line_sums: Optional[Tuple[float, ...]] = None
 
     def payload(self, cluster):
         return float(self.inter_total), 0.0
 
     def to_dict(self):
-        return {"kind": self.kind, "bound_bytes": float(self.bound_bytes),
-                "inter_total": float(self.inter_total)}
+        d = {"kind": self.kind, "bound_bytes": float(self.bound_bytes),
+             "inter_total": float(self.inter_total)}
+        if self.line_sums is not None:
+            d["line_sums"] = [float(x) for x in self.line_sums]
+        return d
 
     @classmethod
     def from_dict(cls, d):
+        ls = d.get("line_sums")
         return cls(bound_bytes=float(d["bound_bytes"]),
-                   inter_total=float(d["inter_total"]))
+                   inter_total=float(d["inter_total"]),
+                   line_sums=None if ls is None else
+                   tuple(float(x) for x in ls))
 
 
 @register_phase
@@ -313,14 +324,24 @@ class Plan:
 
     Attributes:
       algorithm: registry name of the scheduler that produced this plan.
-      cluster: the two-tier cluster the plan targets.
+      cluster: the two-tier cluster the plan targets (scalar shape view).
       phases: ordered typed phases (see module docstring).
       synth_seconds: wall-clock schedule-synthesis time (paper Fig 17a).
       extra_memory_bytes: staging buffers beyond the universal 2x send/recv
         footprint (FLASH's load-balance + redistribute staging, Fig 17b).
       accounts_intra: whether this plan explicitly schedules the workload's
         intra-server bytes (validate() only checks intra conservation then).
-      fingerprint: traffic-matrix fingerprint of the source workload.
+      fingerprint: traffic-matrix fingerprint of the source workload
+        (includes the topology fingerprint).
+      topology: the link-level fabric this plan was synthesized for; None
+        means "the homogeneous fabric derived from ``cluster``" (``topo``
+        resolves it).  Executing a plan on a *different* fabric than it was
+        synthesized for is a deliberate topology-blindness experiment --
+        pass the override to ``execute_plan``.
+      nic_shares: optional (n_servers, n_servers, m_gpus) per-rail fraction
+        of each (src, dst) server pair's slot bytes, fixed at synthesis
+        time (FLASH's capacity-proportional rebalance target; rail g of a
+        pair is capped by the slower endpoint NIC).  None = uniform 1/m.
     """
 
     algorithm: str
@@ -330,6 +351,13 @@ class Plan:
     extra_memory_bytes: float = 0.0
     accounts_intra: bool = True
     fingerprint: Optional[str] = None
+    topology: Optional[Topology] = None
+    nic_shares: Optional[np.ndarray] = None
+
+    @property
+    def topo(self) -> Topology:
+        """The fabric the plan was synthesized for (derived when None)."""
+        return self.topology or Topology.from_cluster(self.cluster)
 
     @property
     def stages(self) -> Tuple[PhaseBase, ...]:
@@ -361,6 +389,10 @@ class Plan:
             "extra_memory_bytes": float(self.extra_memory_bytes),
             "accounts_intra": bool(self.accounts_intra),
             "fingerprint": self.fingerprint,
+            "topology": None if self.topology is None
+            else self.topology.to_dict(),
+            "nic_shares": None if self.nic_shares is None
+            else _listify(self.nic_shares),
         }
 
     @classmethod
@@ -382,6 +414,9 @@ class Plan:
             extra_memory_bytes=float(d["extra_memory_bytes"]),
             accounts_intra=bool(d["accounts_intra"]),
             fingerprint=d.get("fingerprint"),
+            topology=Topology.from_dict(d.get("topology")),
+            nic_shares=None if d.get("nic_shares") is None
+            else _np2d(d["nic_shares"]),
         )
 
     # -- validation -----------------------------------------------------
@@ -398,6 +433,11 @@ class Plan:
         if w.cluster != self.cluster:
             raise PlanValidationError(
                 f"plan targets {self.cluster}, workload runs on {w.cluster}")
+        if self.topo.fingerprint() != w.topo.fingerprint():
+            raise PlanValidationError(
+                "plan was synthesized for a different topology than the "
+                "workload's fabric (stale plan?); re-synthesize or pass an "
+                "explicit execution-topology override to execute_plan")
         for p in self.phases:
             if isinstance(p, PermutationStage):
                 live = [j for j in p.perm if j >= 0]
@@ -437,20 +477,22 @@ class Plan:
 # -- synthesis caching ----------------------------------------------------
 
 def traffic_fingerprint(w: Workload, algorithm: str = "") -> str:
-    """Stable fingerprint of (traffic matrix, cluster, algorithm).
+    """Stable fingerprint of (traffic matrix, topology, algorithm).
 
     Dynamic MoE traffic changes every iteration but frequently repeats
     signatures (hot expert sets recur across steps); an exact content hash
     is what lets PlanCache skip re-synthesis on repeats while never serving
-    a stale plan for different traffic.
+    a stale plan for different traffic.  The topology fingerprint (which
+    covers the cluster shape, every per-server fabric, every NIC capacity
+    and the oversubscription factor) is part of the key, so the same matrix
+    replayed on a different fabric always misses.
     """
     h = hashlib.blake2b(digest_size=16)
     mat = np.ascontiguousarray(w.matrix, dtype=np.float64)
     h.update(str(mat.shape).encode())
     h.update(mat.tobytes())
-    c = w.cluster
-    h.update(repr((c.n_servers, c.m_gpus, c.b_intra, c.b_inter, c.alpha,
-                   c.intra_topology, algorithm)).encode())
+    h.update(w.topo.fingerprint().encode())
+    h.update(algorithm.encode())
     return h.hexdigest()
 
 

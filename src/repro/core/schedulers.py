@@ -108,13 +108,17 @@ class Scheduler(abc.ABC):
 
     @abc.abstractmethod
     def plan_phases(self, w: Workload) -> Tuple[tuple, float]:
+        """Return (phases, extra_memory_bytes) or (phases,
+        extra_memory_bytes, nic_shares) for topology-aware schedulers."""
         ...
 
     def synthesize(self, w: Workload,
                    fingerprint: Optional[str] = None) -> Plan:
         t0 = time.perf_counter()
-        phases, extra_mem = self.plan_phases(w)
+        out = self.plan_phases(w)
         synth = time.perf_counter() - t0
+        phases, extra_mem = out[0], out[1]
+        nic_shares = out[2] if len(out) > 2 else None
         # Fingerprint hashing (O(matrix bytes)) stays outside the timed
         # window: synth_seconds is the paper's Fig 17a synthesis metric.
         if fingerprint is None:
@@ -127,6 +131,8 @@ class Scheduler(abc.ABC):
             extra_memory_bytes=float(extra_mem),
             accounts_intra=self.accounts_intra,
             fingerprint=fingerprint,
+            topology=w.topology,
+            nic_shares=nic_shares,
         )
 
 
@@ -150,11 +156,16 @@ class FlashScheduler(Scheduler):
         t_server, s_intra = server_reduce(w.matrix, m)
 
         # Load-balance phase: per (server, gpu), how many bytes must this
-        # GPU shed so that every local GPU holds exactly T[a, j] / m for
-        # every dest j?
+        # GPU shed so that every local GPU holds exactly its rail's share
+        # of T[a, j] for every dest j?  Shares are proportional to rail
+        # capacity, min(src NIC, dst NIC) per rail (topology-aware
+        # rebalance): on a homogeneous fabric this is the paper's uniform
+        # T/m split; with degraded or mixed-speed NICs the fast rails carry
+        # more so every rail of a pair drains simultaneously.
+        shares = w.topo.nic_shares()  # (n, n, m): [src, dst, rail]
         per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
-        target = t_server / m  # (n, n); diagonal 0
-        excess = np.maximum(per_gpu_dest - target[:, None, :], 0.0)
+        target = t_server[:, None, :] * shares.transpose(0, 2, 1)  # (n, m, n)
+        excess = np.maximum(per_gpu_dest - target, 0.0)
         excess[np.arange(n), :, np.arange(n)] = 0.0  # intra not balanced
         lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
 
@@ -172,7 +183,12 @@ class FlashScheduler(Scheduler):
         # Staging beyond 2x send/recv: load-balance + redistribute buffers
         # (the measured ~2.6x slope of Fig 17b).
         extra_mem = float(lb_moved.sum()) + inter_bytes / m
-        return tuple(phases), extra_mem
+        # Uniform shares are the executor's fallback: carrying a dense
+        # (n, n, m) array on every homogeneous plan would only bloat the
+        # PlanCache and JSON wire format.
+        if w.topo.is_homogeneous:
+            return tuple(phases), extra_mem
+        return tuple(phases), extra_mem, shares
 
 
 # -- FanOut ----------------------------------------------------------------
@@ -250,8 +266,12 @@ class OptimalScheduler(Scheduler):
 
     def plan_phases(self, w: Workload):
         t_server = w.server_matrix()
+        # Per-server max(row, col) line sums let the executor bound each
+        # server against its own aggregate NIC capacity (heterogeneous NICs).
+        line = np.maximum(t_server.sum(axis=1), t_server.sum(axis=0))
         return (BoundStage(bound_bytes=max_line_sum(t_server),
-                           inter_total=float(t_server.sum())),), 0.0
+                           inter_total=float(t_server.sum()),
+                           line_sums=tuple(float(x) for x in line)),), 0.0
 
 
 # -- synthesis helpers (vectorized hot paths) ------------------------------
@@ -292,10 +312,12 @@ def hierarchical_nic_loads(w: Workload):
 
 
 def optimal_completion_time(w: Workload) -> float:
-    """Theorem 1: max line sum of the server matrix over aggregate NIC bw."""
-    c = w.cluster
+    """Theorem 1, link-level: each server's max(row, col) line sum over its
+    own aggregate NIC capacity, and the whole exchange over the spine.
+    Reduces to ``max_line_sum / (m * b_inter)`` on homogeneous fabrics."""
     t_server = w.server_matrix()
-    return max_line_sum(t_server) / (c.m_gpus * c.b_inter)
+    line = np.maximum(t_server.sum(axis=1), t_server.sum(axis=0))
+    return w.topo.theorem1_time(line, float(t_server.sum()))
 
 
 def synthesis_time(

@@ -1,11 +1,30 @@
-"""Generic alpha-beta plan executor (paper 6.3).
+"""Link-level plan executor (paper 6.3, generalized to heterogeneous fabrics).
 
 One executor times *every* scheduler: it walks a scheduler-agnostic ``Plan``
-(core/plan.py) and interprets each typed phase under the alpha-beta cost
-model -- each transfer costs ``alpha + bytes / bandwidth``; concurrent
-transfers on a shared resource (a NIC, an intra-server fabric) divide its
-bandwidth.  Incast and straggler effects are properties of stage *types*,
-not algorithm names:
+(core/plan.py) and interprets each typed phase against the *named resources*
+of a ``Topology`` (core/topology.py) -- per-NIC send/recv occupancy, per-
+server intra fabrics, and the scale-out spine:
+
+  * every flow is pinned to the NICs and fabrics it actually crosses: an
+    inter-server flow is limited by ``min`` of its endpoint NIC capacities,
+    an intra-server flow by its server's fabric;
+  * a server's inter-server slot bytes are split across its NICs by the
+    plan's ``nic_shares`` (FLASH's capacity-proportional rebalance target;
+    uniform 1/m when the plan is topology-blind) -- on a degraded or
+    mixed-speed fabric the blind uniform split strands bytes on the slow
+    NIC while the aware split keeps every NIC draining simultaneously;
+  * every inter phase is additionally bounded by the spine:
+    ``stage_inter_bytes / (sum(nic_bw) / oversubscription)`` -- inert at
+    full bisection, binding when the scale-out tier is oversubscribed.
+
+On a homogeneous topology all of this reduces algebraically to the scalar
+alpha-beta model (each transfer costs ``alpha + bytes / bandwidth``;
+concurrent transfers on a shared resource divide its bandwidth), and the
+executor reproduces the scalar executor's completion times to <= 1e-9
+relative error (golden-tested in tests/test_plan_ir.py).
+
+Incast and straggler effects remain properties of stage *types*, not
+algorithm names:
 
   * PermutationStage -- incast-free/straggler-free; ascending consecutive
     stages pipeline (stage k's redistribute hides under stage k+1's
@@ -22,20 +41,24 @@ not algorithm names:
     short flows drain early, so skew *reduces* collision frequency.
   * RailStage -- the max-loaded rail is the straggler; one wakeup per
     rotation round.
-  * BoundStage -- the Theorem 1 analytic bound.
+  * BoundStage -- the Theorem 1 analytic bound, per-server line sums
+    against per-server aggregate NIC capacity.
 
 The figure of merit is *algorithmic bandwidth*:
 
     AlgoBW = total_bytes / completion_time / n_gpus      [bytes/s/GPU]
 
 ``simulate(w, name)`` is the one-call pipeline: registry lookup ->
-synthesis (optionally via a PlanCache) -> execution.
+synthesis (optionally via a PlanCache) -> execution.  Passing
+``topology=`` executes a plan on a *different* fabric than it was
+synthesized for -- the topology-blindness experiment of
+benchmarks/fig_hetero.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Mapping, Optional
+from typing import Dict, Iterator, List, Mapping, Optional
 
 import numpy as np
 
@@ -52,6 +75,7 @@ from .plan import (
     RedistributePhase,
 )
 from .schedulers import SCHEDULERS, get_scheduler
+from .topology import Topology, bw_div as _div, bw_sdiv as _sdiv
 from .traffic import Workload
 
 __all__ = ["SimResult", "simulate", "execute_plan", "ALGORITHMS"]
@@ -75,33 +99,52 @@ class SimResult:
         return self.algbw / 1e9
 
 
-def _permutation_times(plan: Plan, sizes: np.ndarray) -> Dict[str, float]:
+def _perm_stage_time(topo: Topology, ph: PermutationStage,
+                     shares: np.ndarray) -> float:
+    """One permutation stage, link-level (no alpha): each live sender i
+    ships a ``size``-byte slot to perm[i], split across its NICs by
+    ``shares``; rail g of the pair is capped by the slower endpoint NIC;
+    the stage also crosses the spine once."""
+    perm = np.asarray(ph.perm, dtype=np.int64)
+    src = np.nonzero(perm >= 0)[0]
+    if src.size == 0:
+        return 0.0
+    dst = perm[src]
+    rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[dst])  # (k, m)
+    flows = ph.size * shares[src, dst]                          # (k, m)
+    t = float(_div(flows, rail_caps).max(initial=0.0))
+    spine = _sdiv(ph.size * len(src), topo.spine_bandwidth)
+    return max(t, spine)
+
+
+def _permutation_times(topo: Topology, stages: List[PermutationStage],
+                       shares: np.ndarray) -> Dict[str, float]:
     """Ascending Birkhoff stage pipeline (paper 4.3 / Theorem 2).
 
-    inter: sum over stages of alpha + l_k / (m * B2).
+    inter: sum over stages of alpha + link-level stage time.
     hidden_residual: stage k's redistribute must fit under stage k+1's
       transfer because l_k <= l_{k+1} and B1 > B2 (Theorem 2 pipelining
-      argument); any excess is charged.
+      argument); any excess is charged.  The redistribute rides the
+      slowest server fabric.
     """
-    c = plan.cluster
-    m = c.m_gpus
-    bw_intra = c.intra_a2a_bandwidth()
+    m = topo.m_gpus
+    worst_a2a = float(topo.intra_a2a_bw.min())
+    times = [_perm_stage_time(topo, ph, shares) for ph in stages]
     inter = 0.0
     hidden_residual = 0.0
-    for k, l in enumerate(sizes):
-        inter += c.alpha + l / (m * c.b_inter)
-        if k + 1 < len(sizes):
-            redis = (l / m) / bw_intra
-            nxt = sizes[k + 1] / (m * c.b_inter)
-            hidden_residual += max(0.0, redis - nxt)
+    for k, ph in enumerate(stages):
+        inter += topo.alpha + times[k]
+        if k + 1 < len(stages):
+            redis = _sdiv(ph.size / m, worst_a2a)
+            hidden_residual += max(0.0, redis - times[k + 1])
     return {"inter": inter, "hidden_residual": hidden_residual}
 
 
-def _fanout_time(plan: Plan, ph: FanOutBurst) -> float:
+def _fanout_time(topo: Topology, ph: FanOutBurst) -> float:
     """One burst: receiver NICs fair-share + incast; sender uplinks bound;
-    intra traffic rides the fast fabric concurrently; one wakeup."""
-    c = plan.cluster
-    n, m = c.n_servers, c.m_gpus
+    intra traffic rides each server's fabric concurrently; one wakeup."""
+    n, m = topo.n_servers, topo.m_gpus
+    nic = topo.nic_bw
     blk = ph.matrix.reshape(n, m, n, m)
     # Zero the same-server sender rows per receiver: intra rides the fast
     # fabric, not the NIC.
@@ -110,37 +153,69 @@ def _fanout_time(plan: Plan, ph: FanOutBurst) -> float:
     fmax = inter_flows.max(axis=(0, 1), initial=0.0)
     senders = np.divide(inbound, fmax, out=np.zeros_like(inbound),
                         where=fmax > 0)
-    base = inbound / c.b_inter
+    base = _div(inbound, nic)
     collapse = (inbound > _INCAST_BUFFER_BYTES) & (senders > 1)
     if collapse.any():
         over = inbound - _INCAST_BUFFER_BYTES
         eta = 1.0 / (1.0 + _INCAST_GAMMA * (senders - 1))
-        with np.errstate(divide="ignore", invalid="ignore"):
-            collapsed = (_INCAST_BUFFER_BYTES / c.b_inter
-                         + over / (c.b_inter * eta))
+        collapsed = (_div(np.full_like(inbound, _INCAST_BUFFER_BYTES), nic)
+                     + _div(np.maximum(over, 0.0), nic * eta))
         base = np.where(collapse, collapsed, base)
     t = float(base.max(initial=0.0))
     # Sender uplinks (no incast on the send side).
     outbound = inter_flows.sum(axis=(2, 3))          # (n, m) per sender NIC
-    t = max(t, float(outbound.max(initial=0.0)) / c.b_inter)
-    # Intra traffic rides the fast fabric concurrently.
+    t = max(t, float(_div(outbound, nic).max(initial=0.0)))
+    # Intra traffic rides each server's fabric concurrently.
     intra_per_gpu = np.einsum("agah->ag", blk)       # (n, m)
-    t = max(t, float(intra_per_gpu.max(initial=0.0))
-            / c.intra_a2a_bandwidth())
-    return t + c.alpha
+    t = max(t, float(_div(intra_per_gpu,
+                          topo.intra_a2a_bw[:, None]).max(initial=0.0)))
+    # Everything crosses the spine at once.
+    t = max(t, _sdiv(float(inter_flows.sum()), topo.spine_bandwidth))
+    return t + topo.alpha
 
 
-def execute_plan(plan: Plan, w: Workload) -> SimResult:
-    """Time a Plan under the alpha-beta model.
+def _barrier_time(topo: Topology, ph: BarrierStage) -> float:
+    """Slowest flow of a barrier-synchronized flow set, each flow pinned to
+    the resources it crosses (endpoint NICs, or the source server fabric)."""
+    m = topo.m_gpus
+    src = np.arange(len(ph.sizes))
+    dst = ph.dsts.astype(np.int64)
+    src_s, src_g = src // m, src % m
+    dst_s, dst_g = dst // m, dst % m
+    same = src_s == dst_s
+    inter_caps = np.minimum(topo.nic_bw[src_s, src_g],
+                            topo.nic_bw[dst_s, dst_g])
+    bw = np.where(same, topo.intra_path_bw[src_s], inter_caps)
+    stage = float(_div(ph.sizes, bw).max(initial=0.0))
+    spine = _sdiv(float(ph.sizes[~same].sum()), topo.spine_bandwidth)
+    return max(stage, spine)
+
+
+def execute_plan(plan: Plan, w: Workload, *,
+                 topology: Optional[Topology] = None) -> SimResult:
+    """Time a Plan against a Topology's link-level resources.
 
     Phase semantics are dispatched on phase *type* (see module docstring);
     overlap phases (IntraOverlapPhase) are resolved against the inter
     phase's duration after all stages are timed.  The breakdown always sums
     to completion_time.
+
+    Args:
+      plan: the synthesized schedule.
+      w: the workload (total-bytes accounting).
+      topology: execution fabric override.  Default: the topology the plan
+        was synthesized for.  Passing a different (same-shape) fabric times
+        a topology-blind schedule on the real degraded/heterogeneous
+        fabric.
     """
-    c = plan.cluster
-    m = c.m_gpus
-    bw_intra = c.intra_a2a_bandwidth()
+    topo = topology if topology is not None else plan.topo
+    if (topo.n_servers, topo.m_gpus) != (plan.cluster.n_servers,
+                                         plan.cluster.m_gpus):
+        raise ValueError(
+            f"execution topology shape ({topo.n_servers}, {topo.m_gpus}) "
+            f"!= plan shape ({plan.cluster.n_servers}, "
+            f"{plan.cluster.m_gpus})")
+    m = topo.m_gpus
     breakdown: Dict[str, float] = {}
     n_stages = 0
     overlap_phases = []
@@ -148,44 +223,54 @@ def execute_plan(plan: Plan, w: Workload) -> SimResult:
     def add(key: str, dt: float) -> None:
         breakdown[key] = breakdown.get(key, 0.0) + dt
 
-    perm_sizes = np.array([p.size for p in plan.phases
-                           if isinstance(p, PermutationStage)])
-    if len(perm_sizes):
-        for key, dt in _permutation_times(plan, perm_sizes).items():
+    perm_stages = [p for p in plan.phases if isinstance(p, PermutationStage)]
+    if perm_stages:
+        # Shares are only consumed by permutation timing; the uniform
+        # fallback is built lazily so non-FLASH plans never allocate it.
+        shares = (plan.nic_shares if plan.nic_shares is not None
+                  else np.full((topo.n_servers, topo.n_servers, m), 1.0 / m))
+        for key, dt in _permutation_times(topo, perm_stages,
+                                          shares).items():
             add(key, dt)
-        n_stages += len(perm_sizes)
+        n_stages += len(perm_stages)
 
     for ph in plan.phases:
         if isinstance(ph, PermutationStage):
             continue  # timed collectively above (pipelined group)
         if isinstance(ph, LoadBalancePhase):
-            moved = float(ph.moved_per_gpu.max(initial=0.0))
-            head = moved / bw_intra
-            if ph.charge_alpha and moved > 0:
-                head += c.alpha
+            head = float(_div(ph.moved_per_gpu,
+                              topo.intra_a2a_bw[:, None]).max(initial=0.0))
+            if ph.charge_alpha and float(
+                    ph.moved_per_gpu.max(initial=0.0)) > 0:
+                head += topo.alpha
             add("head", head)
         elif isinstance(ph, BarrierStage):
-            same = (np.arange(len(ph.sizes)) // m) == (ph.dsts // m)
-            bw = np.where(same, c.intra_path_bandwidth(), c.b_inter)
-            stage = float((ph.sizes / bw).max(initial=0.0))
+            stage = _barrier_time(topo, ph)
             if stage > 0:
-                add("inter", c.alpha + stage)
+                add("inter", topo.alpha + stage)
             n_stages += 1
         elif isinstance(ph, FanOutBurst):
-            add("inter", _fanout_time(plan, ph))
+            add("inter", _fanout_time(topo, ph))
             n_stages += 1
         elif isinstance(ph, RailStage):
-            add("inter", max(float(ph.send.max(initial=0.0)),
-                             float(ph.recv.max(initial=0.0))) / c.b_inter)
-            add("sync", c.alpha * max(ph.n_rounds, 1))
+            rail = max(float(_div(ph.send, topo.nic_bw).max(initial=0.0)),
+                       float(_div(ph.recv, topo.nic_bw).max(initial=0.0)))
+            spine = _sdiv(float(ph.send.sum()), topo.spine_bandwidth)
+            add("inter", max(rail, spine))
+            add("sync", topo.alpha * max(ph.n_rounds, 1))
             n_stages += ph.n_rounds
         elif isinstance(ph, BoundStage):
-            add("inter", ph.bound_bytes / (m * c.b_inter))
+            if ph.line_sums is not None:
+                t = topo.theorem1_time(ph.line_sums, ph.inter_total)
+            else:  # legacy scalar form (pre-topology serialized plans)
+                t = max(_sdiv(ph.bound_bytes, float(topo.send_caps.max())),
+                        _sdiv(ph.inter_total, topo.spine_bandwidth))
+            add("inter", t)
             n_stages += 1
         elif isinstance(ph, RedistributePhase):
-            tail = ph.bytes_per_gpu / bw_intra
+            tail = _sdiv(ph.bytes_per_gpu, float(topo.intra_a2a_bw.min()))
             if ph.charge_alpha:
-                tail += c.alpha
+                tail += topo.alpha
             add("tail", tail)
         elif isinstance(ph, IntraOverlapPhase):
             overlap_phases.append(ph)
@@ -195,8 +280,10 @@ def execute_plan(plan: Plan, w: Workload) -> SimResult:
     # Local traffic S_i spreads over the m GPUs' intra fabric and overlaps
     # the inter phase; only the residual beyond it is charged.
     for ph in overlap_phases:
-        s_max = float(ph.per_server.max(initial=0.0))
-        intra_t = (s_max / (m * bw_intra) + c.alpha) if s_max > 0 else 0.0
+        v = float(_div(ph.per_server,
+                       m * topo.intra_a2a_bw).max(initial=0.0))
+        intra_t = (v + topo.alpha) if float(
+            ph.per_server.max(initial=0.0)) > 0 else 0.0
         add("intra_residual",
             max(0.0, intra_t - breakdown.get("inter", 0.0)))
 
@@ -207,7 +294,7 @@ def execute_plan(plan: Plan, w: Workload) -> SimResult:
     return SimResult(
         algorithm=plan.algorithm,
         completion_time=t,
-        algbw=total / t / c.n_gpus if t > 0 else float("inf"),
+        algbw=total / t / topo.n_gpus if t > 0 else float("inf"),
         breakdown=breakdown,
         n_stages=n_stages,
         synth_seconds=plan.synth_seconds,
@@ -221,16 +308,19 @@ def simulate(
     *,
     plan: Optional[Plan] = None,
     cache: Optional[PlanCache] = None,
+    topology: Optional[Topology] = None,
 ) -> SimResult:
     """Scheduler -> Plan -> Executor, in one call.
 
     Args:
-      w: the GPU-level workload.
+      w: the GPU-level workload (its ``topo`` drives synthesis).
       algorithm: registry name (see available_schedulers()).
       plan: pre-synthesized Plan to execute (skips synthesis entirely).
-      cache: optional PlanCache; on a repeated traffic fingerprint the
-        cached Plan is executed without re-synthesis (hit/miss counters on
-        the cache record the reuse rate).
+      cache: optional PlanCache; on a repeated (traffic, topology)
+        fingerprint the cached Plan is executed without re-synthesis
+        (hit/miss counters on the cache record the reuse rate).
+      topology: execution fabric override (see ``execute_plan``): times the
+        plan on a fabric other than the one it was synthesized for.
     """
     if plan is None:
         scheduler = get_scheduler(algorithm)
@@ -238,11 +328,19 @@ def simulate(
             plan = cache.get_or_synthesize(scheduler, w)
         else:
             plan = scheduler.synthesize(w)
-    elif plan.algorithm != algorithm:
-        raise ValueError(
-            f"plan was synthesized by {plan.algorithm!r}, asked to "
-            f"execute as {algorithm!r}")
-    return execute_plan(plan, w)
+    else:
+        if plan.algorithm != algorithm:
+            raise ValueError(
+                f"plan was synthesized by {plan.algorithm!r}, asked to "
+                f"execute as {algorithm!r}")
+        if topology is None and \
+                plan.topo.fingerprint() != w.topo.fingerprint():
+            raise ValueError(
+                "plan was synthesized for a different fabric than the "
+                "workload's topology (stale plan after a fabric change?); "
+                "re-synthesize, or pass topology= explicitly to time the "
+                "blind schedule on the new fabric")
+    return execute_plan(plan, w, topology=topology)
 
 
 class _AlgorithmView(Mapping):

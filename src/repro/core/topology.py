@@ -1,0 +1,362 @@
+"""First-class two-tier fabric model: named link-level resources.
+
+The paper's claim is efficient scheduling on *heterogeneous* two-tier
+fabrics (H200 NVLink vs MI300X xGMI, mixed NIC generations, degraded
+links), but a ``ClusterSpec`` models the cluster as two scalars -- every
+server, NIC and link identical.  ``Topology`` replaces those scalars with
+explicit resources:
+
+  * one ``ServerFabric`` per server -- intra topology type, per-link
+    bandwidth and GPU count (mixed-generation servers);
+  * a per-NIC capacity matrix ``nic_bw[server, nic]`` in bytes/s
+    (heterogeneous NIC speeds; a degraded link is a scaled entry, a failed
+    link is a zero);
+  * an optional scale-out ``oversubscription`` factor capping the
+    aggregate cross-fabric ("spine") bandwidth at
+    ``sum(nic_bw) / oversubscription`` per direction.
+
+``Topology.from_cluster`` is the adapter that keeps every existing
+``ClusterSpec`` call site working: a homogeneous Topology derived from a
+spec reproduces the scalar cost model exactly (the link-level executor in
+simulator.py is golden-tested to <= 1e-9 relative error against the
+scalar formulas).  ``fingerprint()`` is the content hash that keys
+``PlanCache`` entries and stamps synthesized Plans, so a traffic matrix
+replayed on a different fabric can never be served a stale plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "ServerFabric",
+    "Topology",
+    "fabric_path_bandwidth",
+    "fabric_a2a_bandwidth",
+    "bw_div",
+    "bw_sdiv",
+]
+
+
+def bw_div(x, bw) -> np.ndarray:
+    """Elementwise x / bw with failed links handled: 0 bandwidth carries
+    nothing in finite time (inf when bytes > 0, 0 when idle)."""
+    x, bw = np.broadcast_arrays(np.asarray(x, dtype=np.float64),
+                                np.asarray(bw, dtype=np.float64))
+    out = np.zeros(x.shape)
+    np.divide(x, bw, out=out, where=bw > 0)
+    out[(bw <= 0) & (x > 0)] = np.inf
+    return out
+
+
+def bw_sdiv(x: float, bw: float) -> float:
+    """Scalar form of bw_div: same zero-bandwidth contract."""
+    if x <= 0:
+        return 0.0
+    return x / bw if bw > 0 else float("inf")
+
+
+def fabric_path_bandwidth(intra_topology: str, b_intra: float,
+                          m_gpus: int) -> float:
+    """Effective single-path intra-server bandwidth under the topology.
+
+    full_mesh / switch: a pairwise transfer rides one dedicated link.
+    ring: average path crosses m/4 hops sharing the ring -> ~4/m of a link.
+    hybrid_cube (DGX-1 style): ~half of full-mesh efficiency.
+    These coarse factors reproduce the ordering of paper Fig 16a.
+    """
+    if intra_topology in ("full_mesh", "switch"):
+        return b_intra
+    if intra_topology == "ring":
+        return b_intra * 4.0 / max(m_gpus, 4)
+    if intra_topology == "hybrid_cube":
+        return b_intra * 0.5
+    raise ValueError(f"unknown intra topology {intra_topology!r}")
+
+
+def fabric_a2a_bandwidth(intra_topology: str, b_intra: float,
+                         m_gpus: int) -> float:
+    """Aggregate per-GPU bandwidth during an intra-server All-to-All.
+
+    Coarse per-topology efficiency factors, calibrated to reproduce the
+    paper's Fig 16a ordering (switch/full-mesh near-optimal; ring and
+    hybrid-cube at 0.86-0.92x due to multi-hop shuffles).
+    """
+    if intra_topology in ("full_mesh",):
+        return b_intra * max(m_gpus - 1, 1)
+    if intra_topology == "switch":
+        return b_intra  # switch port caps a GPU at one link rate
+    if intra_topology == "ring":
+        # two directions, average path m/4 hops sharing ring capacity
+        return b_intra * 2 * 4.0 / max(m_gpus, 4)
+    if intra_topology == "hybrid_cube":
+        # 4 links/GPU, ~half usable bisection for an A2A shuffle
+        return b_intra * 2
+    raise ValueError(f"unknown intra topology {intra_topology!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerFabric:
+    """One server's intra fabric: type, per-link bandwidth, GPU count."""
+
+    intra_topology: str = "full_mesh"
+    b_intra: float = 64e9
+    m_gpus: int = 8
+
+    def path_bandwidth(self) -> float:
+        return fabric_path_bandwidth(self.intra_topology, self.b_intra,
+                                     self.m_gpus)
+
+    def a2a_bandwidth(self) -> float:
+        return fabric_a2a_bandwidth(self.intra_topology, self.b_intra,
+                                    self.m_gpus)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"intra_topology": self.intra_topology,
+                "b_intra": float(self.b_intra),
+                "m_gpus": int(self.m_gpus)}
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Topology:
+    """Two-tier fabric as explicit per-server / per-NIC resources.
+
+    Attributes:
+      fabrics: one ``ServerFabric`` per server.
+      nic_bw: (n_servers, m_gpus) per-NIC bandwidth, bytes/s.  Uplink =
+        downlink (full duplex, paper assumption (1)).  Zero = failed link.
+      alpha: per-stage wakeup latency (alpha-beta model, paper 6.3).
+      oversubscription: scale-out fabric factor >= 1; the spine carries at
+        most ``sum(nic_bw) / oversubscription`` bytes/s per direction.
+        1.0 = full bisection (no effect).
+    """
+
+    fabrics: Tuple[ServerFabric, ...]
+    nic_bw: np.ndarray
+    alpha: float = 10e-6
+    oversubscription: float = 1.0
+
+    def __post_init__(self):
+        # Defensive copy + freeze: fingerprint()/__hash__ key PlanCache
+        # entries, so the array must never change under us.
+        nic = np.array(self.nic_bw, dtype=np.float64, order="C", copy=True)
+        nic.flags.writeable = False
+        object.__setattr__(self, "nic_bw", nic)
+        object.__setattr__(self, "fabrics", tuple(self.fabrics))
+        n = len(self.fabrics)
+        if n == 0:
+            raise ValueError("topology needs at least one server")
+        counts = {f.m_gpus for f in self.fabrics}
+        if len(counts) != 1:
+            raise ValueError(
+                "heterogeneous per-server GPU counts are not supported "
+                f"yet (got {sorted(counts)}); see ROADMAP open items")
+        m = self.fabrics[0].m_gpus
+        if nic.shape != (n, m):
+            raise ValueError(
+                f"nic_bw shape {nic.shape} != (n_servers, m_gpus) = "
+                f"({n}, {m})")
+        if np.any(nic < 0):
+            raise ValueError("NIC bandwidths must be >= 0")
+        if self.oversubscription < 1.0:
+            raise ValueError(
+                f"oversubscription must be >= 1, got {self.oversubscription}")
+        # Derived per-resource capacities, computed once (the executor reads
+        # them several times per plan); frozen like nic_bw.
+        for attr, arr in (
+                ("_send_caps", nic.sum(axis=1)),
+                ("_intra_path_bw",
+                 np.array([f.path_bandwidth() for f in self.fabrics])),
+                ("_intra_a2a_bw",
+                 np.array([f.a2a_bandwidth() for f in self.fabrics]))):
+            arr.flags.writeable = False
+            object.__setattr__(self, attr, arr)
+
+    # -- shape ----------------------------------------------------------
+
+    @property
+    def n_servers(self) -> int:
+        return len(self.fabrics)
+
+    @property
+    def m_gpus(self) -> int:
+        return self.fabrics[0].m_gpus
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_servers * self.m_gpus
+
+    # -- derived link-level capacities ----------------------------------
+
+    @property
+    def send_caps(self) -> np.ndarray:
+        """(n_servers,) aggregate NIC capacity per server, one direction."""
+        return self._send_caps
+
+    @property
+    def spine_bandwidth(self) -> float:
+        """Aggregate cross-fabric bandwidth per direction (scale-out tier)."""
+        return float(self.nic_bw.sum()) / self.oversubscription
+
+    @property
+    def intra_path_bw(self) -> np.ndarray:
+        """(n_servers,) single-path intra bandwidth per server fabric."""
+        return self._intra_path_bw
+
+    @property
+    def intra_a2a_bw(self) -> np.ndarray:
+        """(n_servers,) per-GPU intra All-to-All bandwidth per fabric."""
+        return self._intra_a2a_bw
+
+    def theorem1_time(self, line_sums, inter_total: float) -> float:
+        """Theorem 1 lower bound on this fabric: each server's max(row, col)
+        line sum over its aggregate NIC capacity, and the whole exchange
+        over the spine.  Single source of truth for the BoundStage executor
+        branch and ``optimal_completion_time``."""
+        per_server = bw_div(np.asarray(line_sums, dtype=np.float64),
+                            self.send_caps)
+        return max(float(per_server.max(initial=0.0)),
+                   bw_sdiv(float(inter_total), self.spine_bandwidth))
+
+    @property
+    def is_homogeneous(self) -> bool:
+        """Identical fabrics, identical NICs, full-bisection spine."""
+        return (len(set(self.fabrics)) == 1
+                and np.all(self.nic_bw == self.nic_bw.flat[0])
+                and self.oversubscription == 1.0)
+
+    def nic_shares(self) -> np.ndarray:
+        """(n, n, m) fraction of the (src, dst) server-pair bytes each rail
+        should carry so all rails of the pair drain simultaneously.
+
+        Rail g of a pair is capped by the slower of the two endpoint NICs
+        (rail-aligned fabric: NIC g talks to NIC g), so shares are
+        proportional to ``min(nic_bw[src, g], nic_bw[dst, g])`` -- uniform
+        1/m on a homogeneous fabric, zero on a failed rail (the pair's
+        traffic routes around it), uniform fallback for a fully
+        disconnected pair."""
+        n, m = self.nic_bw.shape
+        caps = np.minimum(self.nic_bw[:, None, :], self.nic_bw[None, :, :])
+        tot = caps.sum(axis=-1, keepdims=True)
+        shares = np.full((n, n, m), 1.0 / m)
+        np.divide(caps, tot, out=shares, where=tot > 0)
+        return shares
+
+    # -- adapters --------------------------------------------------------
+
+    @classmethod
+    def from_cluster(cls, cluster) -> "Topology":
+        """ClusterSpec -> homogeneous Topology adapter (exact cost parity)."""
+        fabric = ServerFabric(intra_topology=cluster.intra_topology,
+                              b_intra=cluster.b_intra,
+                              m_gpus=cluster.m_gpus)
+        nic = np.full((cluster.n_servers, cluster.m_gpus), cluster.b_inter)
+        return cls(fabrics=(fabric,) * cluster.n_servers, nic_bw=nic,
+                   alpha=cluster.alpha)
+
+    def cluster_view(self):
+        """Nearest ClusterSpec (shape + back-compat scalar fields).
+
+        Exact round-trip for ``from_cluster`` topologies; for heterogeneous
+        ones the scalars are the fastest resource of each tier and only the
+        *shape* fields should be trusted -- timing goes through the
+        topology itself.
+        """
+        from .traffic import ClusterSpec
+
+        return ClusterSpec(
+            n_servers=self.n_servers,
+            m_gpus=self.m_gpus,
+            b_intra=float(max(f.b_intra for f in self.fabrics)),
+            b_inter=float(self.nic_bw.max()),
+            alpha=self.alpha,
+            intra_topology=self.fabrics[0].intra_topology,
+        )
+
+    # -- scenario constructors ------------------------------------------
+
+    @classmethod
+    def homogeneous(cls, n_servers: int, m_gpus: int, *,
+                    b_intra: float = 64e9, b_inter: float = 12.5e9,
+                    alpha: float = 10e-6,
+                    intra_topology: str = "full_mesh") -> "Topology":
+        fabric = ServerFabric(intra_topology=intra_topology,
+                              b_intra=b_intra, m_gpus=m_gpus)
+        return cls(fabrics=(fabric,) * n_servers,
+                   nic_bw=np.full((n_servers, m_gpus), b_inter),
+                   alpha=alpha)
+
+    def with_nic_bw(self, nic_bw) -> "Topology":
+        return dataclasses.replace(self, nic_bw=np.asarray(nic_bw))
+
+    def degrade_nic(self, server: int, nic: int,
+                    factor: float) -> "Topology":
+        """One NIC running at ``factor`` of its nominal speed (0 = failed)."""
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError(f"degrade factor must be in [0, 1], got {factor}")
+        nic_bw = self.nic_bw.copy()
+        nic_bw[server, nic] *= factor
+        return self.with_nic_bw(nic_bw)
+
+    def fail_nic(self, server: int, nic: int) -> "Topology":
+        return self.degrade_nic(server, nic, 0.0)
+
+    def with_oversubscription(self, factor: float) -> "Topology":
+        return dataclasses.replace(self, oversubscription=float(factor))
+
+    def with_server_nic_speeds(self, speeds: Sequence[float]) -> "Topology":
+        """Mixed NIC generations: per-server uniform NIC speed override."""
+        if len(speeds) != self.n_servers:
+            raise ValueError(
+                f"need {self.n_servers} per-server speeds, got {len(speeds)}")
+        nic_bw = np.tile(np.asarray(speeds, dtype=np.float64)[:, None],
+                         (1, self.m_gpus))
+        return self.with_nic_bw(nic_bw)
+
+    # -- identity --------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Stable content hash: keys PlanCache entries and stamps Plans."""
+        h = hashlib.blake2b(digest_size=16)
+        for f in self.fabrics:
+            h.update(repr((f.intra_topology, f.b_intra, f.m_gpus)).encode())
+        h.update(self.nic_bw.tobytes())
+        h.update(repr((self.alpha, self.oversubscription)).encode())
+        return h.hexdigest()
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, Topology):
+            return NotImplemented
+        return (self.fabrics == other.fabrics
+                and self.nic_bw.shape == other.nic_bw.shape
+                and np.array_equal(self.nic_bw, other.nic_bw)
+                and self.alpha == other.alpha
+                and self.oversubscription == other.oversubscription)
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint())
+
+    # -- serialization ---------------------------------------------------
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "fabrics": [f.to_dict() for f in self.fabrics],
+            "nic_bw": self.nic_bw.tolist(),
+            "alpha": float(self.alpha),
+            "oversubscription": float(self.oversubscription),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Optional[Dict[str, Any]]) -> Optional["Topology"]:
+        if d is None:
+            return None
+        return cls(
+            fabrics=tuple(ServerFabric(**f) for f in d["fabrics"]),
+            nic_bw=np.asarray(d["nic_bw"], dtype=np.float64),
+            alpha=float(d["alpha"]),
+            oversubscription=float(d.get("oversubscription", 1.0)),
+        )

@@ -11,14 +11,21 @@ Generators mirror the paper's evaluation workloads (section 6): balanced,
 random (uniform), skewed (Zipf), plus an MoE-gating generator reproducing the
 Megatron-LM measurement methodology of Fig 4 (top-k routing with a skewed
 expert-popularity prior, traffic matrix changing every iteration).
+
+Every generator accepts either a ``ClusterSpec`` (homogeneous two-scalar
+model) or a ``Topology`` (first-class heterogeneous fabric, topology.py);
+the resulting ``Workload`` carries the topology so schedulers synthesize
+against the real fabric and PlanCache keys include it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
+
+from .topology import Topology, fabric_a2a_bandwidth, fabric_path_bandwidth
 
 __all__ = [
     "ClusterSpec",
@@ -33,12 +40,16 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
-    """Two-tier cluster model (paper Fig 6).
+    """Two-tier cluster model (paper Fig 6), homogeneous scalar form.
 
     Bandwidths are bytes/second *per link*: ``b_intra`` for one intra-server
     link (NVLink / xGMI / ICI) and ``b_inter`` for one GPU's NIC (uplink =
     downlink = b_inter, assumption (1) in section 3).  ``alpha`` is the static
     per-stage wakeup latency of the alpha-beta model (section 6.3).
+
+    For heterogeneous fabrics (mixed NIC speeds, degraded links, per-server
+    fabric types) use ``Topology`` (topology.py); ``to_topology()`` is the
+    adapter.
     """
 
     n_servers: int
@@ -57,53 +68,73 @@ class ClusterSpec:
         return self.b_intra / self.b_inter
 
     def intra_path_bandwidth(self) -> float:
-        """Effective single-path intra-server bandwidth under the topology.
-
-        full_mesh / switch: a pairwise transfer rides one dedicated link.
-        ring: average path crosses m/4 hops sharing the ring -> ~4/m of a link.
-        hybrid_cube (DGX-1 style): ~half of full-mesh efficiency.
-        These coarse factors reproduce the ordering of paper Fig 16a.
-        """
-        if self.intra_topology in ("full_mesh", "switch"):
-            return self.b_intra
-        if self.intra_topology == "ring":
-            return self.b_intra * 4.0 / max(self.m_gpus, 4)
-        if self.intra_topology == "hybrid_cube":
-            return self.b_intra * 0.5
-        raise ValueError(f"unknown intra topology {self.intra_topology!r}")
+        """Effective single-path intra-server bandwidth under the topology."""
+        return fabric_path_bandwidth(self.intra_topology, self.b_intra,
+                                     self.m_gpus)
 
     def intra_a2a_bandwidth(self) -> float:
-        """Aggregate per-GPU bandwidth during an intra-server All-to-All.
+        """Aggregate per-GPU bandwidth during an intra-server All-to-All."""
+        return fabric_a2a_bandwidth(self.intra_topology, self.b_intra,
+                                    self.m_gpus)
 
-        Coarse per-topology efficiency factors, calibrated to reproduce the
-        paper's Fig 16a ordering (switch/full-mesh near-optimal; ring and
-        hybrid-cube at 0.86-0.92x due to multi-hop shuffles).
-        """
-        if self.intra_topology in ("full_mesh",):
-            return self.b_intra * max(self.m_gpus - 1, 1)
-        if self.intra_topology == "switch":
-            return self.b_intra  # switch port caps a GPU at one link rate
-        if self.intra_topology == "ring":
-            # two directions, average path m/4 hops sharing ring capacity
-            return self.b_intra * 2 * 4.0 / max(self.m_gpus, 4)
-        if self.intra_topology == "hybrid_cube":
-            # 4 links/GPU, ~half usable bisection for an A2A shuffle
-            return self.b_intra * 2
-        raise ValueError(f"unknown intra topology {self.intra_topology!r}")
+    def to_topology(self) -> Topology:
+        """Adapter to the first-class fabric model (homogeneous instance)."""
+        return Topology.from_cluster(self)
+
+
+ClusterLike = Union[ClusterSpec, Topology]
+
+
+def _resolve_cluster(cluster: ClusterLike):
+    """Normalize a ClusterSpec-or-Topology argument to (spec, topology)."""
+    if isinstance(cluster, Topology):
+        return cluster.cluster_view(), cluster
+    return cluster, None
 
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
-    """GPU-level traffic matrix plus the cluster it runs on."""
+    """GPU-level traffic matrix plus the fabric it runs on.
+
+    ``topology`` is optional: when None, a homogeneous Topology is derived
+    from ``cluster`` on demand (``topo``), so the two-scalar call sites
+    keep working unchanged.
+    """
 
     cluster: ClusterSpec
     matrix: np.ndarray  # (n_gpus, n_gpus), zero diagonal
+    topology: Optional[Topology] = None
 
     def __post_init__(self):
         n = self.cluster.n_gpus
         if self.matrix.shape != (n, n):
             raise ValueError(
                 f"matrix shape {self.matrix.shape} != ({n}, {n})")
+        if np.any(self.matrix < 0):
+            bad = np.argwhere(self.matrix < 0)[0]
+            raise ValueError(
+                f"traffic matrix has negative entries (e.g. "
+                f"W[{bad[0]}, {bad[1]}] = {self.matrix[bad[0], bad[1]]}); "
+                "byte counts must be >= 0")
+        diag = np.diagonal(self.matrix)
+        if np.any(diag != 0):
+            g = int(np.argmax(diag != 0))
+            raise ValueError(
+                f"traffic matrix has self-traffic on the diagonal "
+                f"(W[{g}, {g}] = {diag[g]}); a GPU does not send to itself "
+                "-- zero the diagonal")
+        if self.topology is not None and (
+                self.topology.n_servers != self.cluster.n_servers
+                or self.topology.m_gpus != self.cluster.m_gpus):
+            raise ValueError(
+                f"topology shape ({self.topology.n_servers}, "
+                f"{self.topology.m_gpus}) != cluster shape "
+                f"({self.cluster.n_servers}, {self.cluster.m_gpus})")
+
+    @property
+    def topo(self) -> Topology:
+        """The fabric to schedule against (derived when not explicit)."""
+        return self.topology or Topology.from_cluster(self.cluster)
 
     @property
     def total_bytes(self) -> float:
@@ -136,25 +167,27 @@ def _zero_diag(w: np.ndarray) -> np.ndarray:
     return w
 
 
-def balanced_workload(cluster: ClusterSpec, size_per_pair: float) -> Workload:
+def balanced_workload(cluster: ClusterLike, size_per_pair: float) -> Workload:
     """Every GPU sends `size_per_pair` bytes to every other GPU."""
+    cluster, topo = _resolve_cluster(cluster)
     n = cluster.n_gpus
     w = np.full((n, n), float(size_per_pair))
-    return Workload(cluster, _zero_diag(w))
+    return Workload(cluster, _zero_diag(w), topo)
 
 
 def random_workload(
-    cluster: ClusterSpec, mean_size: float, seed: int = 0
+    cluster: ClusterLike, mean_size: float, seed: int = 0
 ) -> Workload:
     """Pairwise sizes ~ Uniform[0, 2 * mean] (paper 'Random')."""
+    cluster, topo = _resolve_cluster(cluster)
     rng = np.random.default_rng(seed)
     n = cluster.n_gpus
     w = rng.uniform(0.0, 2.0 * mean_size, size=(n, n))
-    return Workload(cluster, _zero_diag(w))
+    return Workload(cluster, _zero_diag(w), topo)
 
 
 def skewed_workload(
-    cluster: ClusterSpec,
+    cluster: ClusterLike,
     mean_size: float,
     zipf_s: float = 1.2,
     seed: int = 0,
@@ -165,6 +198,7 @@ def skewed_workload(
     total equals the balanced workload's total, making AlgoBW comparable
     across skew factors (as in Fig 13).
     """
+    cluster, topo = _resolve_cluster(cluster)
     rng = np.random.default_rng(seed)
     n = cluster.n_gpus
     n_pairs = n * (n - 1)
@@ -172,15 +206,16 @@ def skewed_workload(
     sizes = ranks ** (-zipf_s)
     sizes *= (mean_size * n_pairs) / sizes.sum()
     rng.shuffle(sizes)
+    # Scatter the shuffled sizes over the off-diagonal entries in row-major
+    # order (boolean assignment fills in C order, matching the (i, j) i != j
+    # enumeration).
     w = np.zeros((n, n))
-    idx = [(i, j) for i in range(n) for j in range(n) if i != j]
-    for (i, j), v in zip(idx, sizes):
-        w[i, j] = v
-    return Workload(cluster, w)
+    w[~np.eye(n, dtype=bool)] = sizes
+    return Workload(cluster, w, topo)
 
 
 def moe_workload(
-    cluster: ClusterSpec,
+    cluster: ClusterLike,
     tokens_per_gpu: int,
     bytes_per_token: int,
     top_k: int = 2,
@@ -195,18 +230,16 @@ def moe_workload(
     with concentration ``expert_skew`` (smaller = more skew), reproducing the
     measured 12.5x p90/median skew of Fig 4a at the defaults.
     """
+    cluster, topo = _resolve_cluster(cluster)
     rng = np.random.default_rng(seed)
     n = cluster.n_gpus
     e = n_experts or n
     popularity = rng.dirichlet(np.full(e, expert_skew))
+    # One batched draw: (n, top_k, e) multinomials consume the generator
+    # stream in the same src-major, draw-minor order as the per-GPU loop.
+    counts = rng.multinomial(
+        tokens_per_gpu, popularity, size=(n, top_k)).sum(axis=1)  # (n, e)
+    # Fold experts onto their host GPUs (expert % n) and drop self-traffic.
     w = np.zeros((n, n))
-    for src in range(n):
-        # Multinomial token split across top-k draws from the popularity prior.
-        counts = np.zeros(e)
-        for _ in range(top_k):
-            counts += rng.multinomial(tokens_per_gpu, popularity)
-        for expert, c in enumerate(counts):
-            dst = expert % n
-            if dst != src and c > 0:
-                w[src, dst] += c * bytes_per_token
-    return Workload(cluster, w)
+    np.add.at(w.T, np.arange(e) % n, counts.astype(np.float64).T)
+    return Workload(cluster, _zero_diag(w) * float(bytes_per_token), topo)

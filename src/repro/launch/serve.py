@@ -86,8 +86,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--a2a", default=None,
-                    choices=available_all_to_all_impls(),
-                    help="MoE All-to-All schedule (registry name); "
+                    choices=available_all_to_all_impls() + ["auto"],
+                    help="MoE All-to-All schedule (registry name, or "
+                         "'auto' to resolve from the fabric topology); "
                          "defaults to the arch config's a2a_impl")
     args = ap.parse_args()
 

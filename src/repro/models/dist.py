@@ -13,6 +13,7 @@ from typing import Optional, Tuple
 from jax.sharding import Mesh
 
 from ..configs.registry import ModelConfig
+from ..core.topology import Topology
 
 __all__ = ["DistContext", "choose_ep_axes"]
 
@@ -25,7 +26,11 @@ class DistContext:
     ep_axes: Optional[Tuple[str, ...]]  # expert-parallel axes, slow-major
     # Registry name consumed by comm.all_to_all.resolve_all_to_all (the one
     # dispatch point for model code, launch/ and benchmarks).
-    a2a_impl: str = "flash"             # flash | direct | hierarchical
+    a2a_impl: str = "flash"             # flash | direct | hierarchical | auto
+    # Physical fabric, when known; a2a_impl="auto" resolves against it
+    # (flash on heterogeneous or oversubscribed fabrics, direct on uniform
+    # full-bisection ones).
+    topology: Optional[Topology] = None
 
     @property
     def ep_size(self) -> int:

@@ -154,6 +154,20 @@ def test_executor_matches_seed_numerics(key):
     assert abs(got - want) <= 1e-9 * want, (key, got, want)
 
 
+@pytest.mark.parametrize("key", sorted(GOLDEN), ids=lambda k: "-".join(k))
+def test_link_level_executor_matches_seed_on_homogeneous_topology(key):
+    """The link-level executor on an explicit (homogeneous) Topology must
+    reproduce the seed's scalar completion times to <= 1e-9 relative
+    error, for every registered scheduler."""
+    from repro.core import Topology
+
+    cn, wn, algo = key
+    w = _workload(Topology.from_cluster(CLUSTERS[cn]), wn)
+    got = simulate(w, algo).completion_time
+    want = GOLDEN[key]
+    assert abs(got - want) <= 1e-9 * want, (key, got, want)
+
+
 @pytest.mark.parametrize("algo", ALGOS)
 @pytest.mark.parametrize("kind", ("balanced", "random", "skewed", "moe"))
 def test_plans_conserve_bytes(algo, kind):

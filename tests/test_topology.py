@@ -1,0 +1,494 @@
+"""Topology layer tests: fabric model, link-level executor parity and
+heterogeneous behavior, topology-keyed PlanCache, workload validation, and
+vectorized generator equivalence."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    Plan,
+    PlanCache,
+    PlanValidationError,
+    ServerFabric,
+    Topology,
+    available_schedulers,
+    balanced_workload,
+    execute_plan,
+    get_scheduler,
+    moe_workload,
+    random_workload,
+    simulate,
+    skewed_workload,
+    traffic_fingerprint,
+)
+from repro.core.traffic import Workload
+
+
+def _homo(n=4, m=8, **kw):
+    return Topology.homogeneous(n, m, **kw)
+
+
+# -- fabric model ----------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [
+    ClusterSpec(4, 8),
+    ClusterSpec(2, 4, intra_topology="ring"),
+    ClusterSpec(8, 2, b_intra=900e9 / 8, intra_topology="switch"),
+    ClusterSpec(4, 8, alpha=0.0, b_inter=50e9),
+])
+def test_from_cluster_round_trips(spec):
+    topo = Topology.from_cluster(spec)
+    assert topo.cluster_view() == spec
+    assert spec.to_topology() == topo
+    assert topo.is_homogeneous
+    assert (topo.n_servers, topo.m_gpus, topo.n_gpus) == \
+        (spec.n_servers, spec.m_gpus, spec.n_gpus)
+
+
+def test_derived_capacities():
+    topo = _homo(4, 8, b_inter=12.5e9)
+    np.testing.assert_allclose(topo.send_caps, 8 * 12.5e9)
+    assert topo.spine_bandwidth == pytest.approx(4 * 8 * 12.5e9)
+    assert topo.with_oversubscription(4.0).spine_bandwidth == \
+        pytest.approx(8 * 12.5e9)
+    c = ClusterSpec(4, 8)
+    np.testing.assert_allclose(Topology.from_cluster(c).intra_a2a_bw,
+                               c.intra_a2a_bandwidth())
+    np.testing.assert_allclose(Topology.from_cluster(c).intra_path_bw,
+                               c.intra_path_bandwidth())
+
+
+def test_scenario_constructors():
+    topo = _homo()
+    deg = topo.degrade_nic(2, 3, 0.25)
+    assert deg.nic_bw[2, 3] == pytest.approx(0.25 * topo.nic_bw[2, 3])
+    assert not deg.is_homogeneous
+    dead = topo.fail_nic(1, 0)
+    assert dead.nic_bw[1, 0] == 0.0
+    mixed = topo.with_server_nic_speeds([1e9, 2e9, 3e9, 4e9])
+    np.testing.assert_allclose(mixed.nic_bw[3], 4e9)
+    assert not topo.with_oversubscription(2.0).is_homogeneous
+
+
+def test_topology_validation():
+    fab = ServerFabric()
+    with pytest.raises(ValueError, match="at least one server"):
+        Topology(fabrics=(), nic_bw=np.zeros((0, 8)))
+    with pytest.raises(ValueError, match="nic_bw shape"):
+        Topology(fabrics=(fab,) * 2, nic_bw=np.ones((2, 4)))
+    with pytest.raises(ValueError, match="GPU counts"):
+        Topology(fabrics=(fab, ServerFabric(m_gpus=4)),
+                 nic_bw=np.ones((2, 8)))
+    with pytest.raises(ValueError, match=">= 0"):
+        Topology(fabrics=(fab,), nic_bw=-np.ones((1, 8)))
+    with pytest.raises(ValueError, match="oversubscription"):
+        _homo().with_oversubscription(0.5)
+    with pytest.raises(ValueError, match="degrade factor"):
+        _homo().degrade_nic(0, 0, 1.5)
+
+
+def test_fingerprint_covers_every_resource():
+    base = _homo()
+    prints = {
+        base.fingerprint(),
+        base.degrade_nic(0, 0, 0.5).fingerprint(),
+        base.with_oversubscription(2.0).fingerprint(),
+        Topology(fabrics=(ServerFabric(intra_topology="ring"),) * 4,
+                 nic_bw=base.nic_bw).fingerprint(),
+        Topology(fabrics=base.fabrics, nic_bw=base.nic_bw,
+                 alpha=0.0).fingerprint(),
+    }
+    assert len(prints) == 5
+    # Content-equal topologies agree (fingerprint is deterministic).
+    assert _homo().fingerprint() == base.fingerprint()
+    assert _homo() == base
+
+
+def test_nic_shares_properties():
+    topo = _homo().degrade_nic(2, 3, 0.25).fail_nic(1, 0)
+    shares = topo.nic_shares()
+    assert shares.shape == (4, 4, 8)
+    np.testing.assert_allclose(shares.sum(axis=-1), 1.0)
+    # Failed rail carries nothing for any pair touching server 1.
+    assert shares[1, 0, 0] == 0.0 and shares[0, 1, 0] == 0.0
+    # Degraded rail carries a sub-uniform share.
+    assert shares[2, 0, 3] < 1.0 / 8
+    # Homogeneous: exactly uniform.
+    np.testing.assert_array_equal(_homo().nic_shares(), 1.0 / 8)
+
+
+def test_serialization_round_trip():
+    topo = _homo().degrade_nic(0, 1, 0.3).with_oversubscription(2.0)
+    wire = json.dumps(topo.to_dict())
+    topo2 = Topology.from_dict(json.loads(wire))
+    assert topo2 == topo
+    assert topo2.fingerprint() == topo.fingerprint()
+    assert Topology.from_dict(None) is None
+
+
+# -- link-level executor: homogeneous parity -------------------------------
+
+@pytest.mark.parametrize("algo", sorted(available_schedulers()))
+@pytest.mark.parametrize("kind", ("balanced", "random", "skewed", "moe"))
+def test_explicit_topology_matches_scalar_path(algo, kind):
+    """Workloads on an explicit homogeneous Topology time identically to
+    the ClusterSpec scalar path (<= 1e-9 relative error)."""
+    spec = ClusterSpec(4, 8)
+    make = {
+        "balanced": lambda c: balanced_workload(c, 4 << 20),
+        "random": lambda c: random_workload(c, 4 << 20, seed=1),
+        "skewed": lambda c: skewed_workload(c, 4 << 20, 1.2, seed=2),
+        "moe": lambda c: moe_workload(c, 8192, 4096, top_k=2, seed=3),
+    }[kind]
+    scalar = simulate(make(spec), algo).completion_time
+    link = simulate(make(Topology.from_cluster(spec)), algo).completion_time
+    assert abs(link - scalar) <= 1e-9 * scalar
+
+
+def test_oversubscription_one_is_inert():
+    topo = _homo()
+    w = random_workload(topo, 8 << 20, seed=0)
+    w_o = random_workload(topo.with_oversubscription(1.0), 8 << 20, seed=0)
+    for algo in available_schedulers():
+        assert simulate(w_o, algo).completion_time == \
+            simulate(w, algo).completion_time
+
+
+# -- heterogeneous behavior ------------------------------------------------
+
+def _aware_and_blind(topo, algo="flash", mean=16 << 20):
+    """(aware, blind) results: synthesized on ``topo`` vs synthesized on
+    the homogeneous fabric and executed on ``topo``."""
+    w = random_workload(topo, mean, seed=0)
+    aware = simulate(w, algo)
+    homo = _homo(topo.n_servers, topo.m_gpus)
+    blind_plan = get_scheduler(algo).synthesize(
+        random_workload(homo, mean, seed=0))
+    blind = simulate(w, algo, plan=blind_plan, topology=topo)
+    return aware, blind
+
+
+def test_degraded_nic_aware_strictly_beats_blind():
+    """Acceptance: topology-aware FLASH strictly beats the topology-blind
+    schedule on a degraded-NIC scenario."""
+    aware, blind = _aware_and_blind(_homo().degrade_nic(2, 3, 0.25))
+    assert aware.completion_time < blind.completion_time
+    assert blind.completion_time > 3.0 * aware.completion_time
+
+
+def test_degradation_sweep_monotone():
+    times = []
+    for factor in (1.0, 0.5, 0.25, 0.1):
+        topo = _homo().degrade_nic(2, 3, factor)
+        times.append(simulate(random_workload(topo, 16 << 20, seed=0),
+                              "flash").completion_time)
+    assert times == sorted(times)
+    # Aware degradation is graceful: 10x slower NIC costs < 15% end-to-end.
+    assert times[-1] < 1.15 * times[0]
+
+
+def test_failed_nic_aware_routes_around():
+    aware, blind = _aware_and_blind(_homo().fail_nic(1, 0))
+    assert np.isfinite(aware.completion_time)
+    assert blind.completion_time == np.inf
+
+
+def test_mixed_rail_speeds_aware_beats_blind():
+    rails = _homo().with_nic_bw(
+        np.tile([50e9] * 4 + [12.5e9] * 4, (4, 1)))
+    aware, blind = _aware_and_blind(rails)
+    assert blind.completion_time > 2.0 * aware.completion_time
+
+
+def test_aware_flash_stays_near_optimal_on_degraded_fabric():
+    topo = _homo().degrade_nic(2, 3, 0.25)
+    w = random_workload(topo, 16 << 20, seed=0)
+    assert simulate(w, "flash").algbw >= 0.9 * simulate(w, "optimal").algbw
+
+
+def test_optimal_bound_sees_per_server_capacity():
+    """A degraded server raises the bound; other servers' don't mask it."""
+    w_h = random_workload(_homo(), 16 << 20, seed=0)
+    slow = _homo().with_server_nic_speeds([12.5e9, 12.5e9, 12.5e9, 6.25e9])
+    w_s = random_workload(slow, 16 << 20, seed=0)
+    assert simulate(w_s, "optimal").completion_time > \
+        simulate(w_h, "optimal").completion_time
+
+
+def test_oversubscription_binds_every_scheduler():
+    for algo in ("flash", "hierarchical", "spreadout", "optimal"):
+        t1 = simulate(random_workload(_homo(), 16 << 20, seed=0),
+                      algo).completion_time
+        t4 = simulate(
+            random_workload(_homo().with_oversubscription(4.0),
+                            16 << 20, seed=0), algo).completion_time
+        # Schedulers whose straggler term already dominates (spreadout)
+        # feel the spine less; everyone must still slow down materially.
+        assert t4 > 1.5 * t1, algo
+
+
+def test_hierarchical_cannot_rebalance_degraded_rail():
+    """The rail-aligned baseline is stuck with its max-loaded rail; FLASH
+    rebalances around it (the paper's skew argument, now for topology)."""
+    topo = _homo().degrade_nic(2, 3, 0.1)
+    w = random_workload(topo, 16 << 20, seed=0)
+    assert simulate(w, "flash").completion_time < \
+        simulate(w, "hierarchical").completion_time
+
+
+def test_optimal_completion_time_matches_simulate_on_hetero():
+    from repro.core import optimal_completion_time
+
+    for topo in (_homo(), _homo().degrade_nic(2, 3, 0.1),
+                 _homo().with_oversubscription(4.0)):
+        w = random_workload(topo, 16 << 20, seed=0)
+        assert optimal_completion_time(w) == pytest.approx(
+            simulate(w, "optimal").completion_time, rel=1e-12)
+
+
+def test_topology_snapshots_caller_array():
+    """nic_bw is copied and frozen: mutating the source array must not
+    change the fingerprint that keys PlanCache entries."""
+    arr = np.full((4, 8), 12.5e9)
+    topo = _homo().with_nic_bw(arr)
+    fp = topo.fingerprint()
+    arr[0, 0] = 1.0
+    assert topo.fingerprint() == fp
+    with pytest.raises(ValueError, match="read-only"):
+        topo.nic_bw[0, 0] = 1.0
+
+
+def test_all_nics_down_yields_inf_not_crash():
+    topo = _homo(2, 2).with_nic_bw(np.zeros((2, 2)))
+    w = balanced_workload(topo, 1 << 20)
+    for algo in available_schedulers():
+        assert simulate(w, algo).completion_time == np.inf, algo
+
+
+def test_homogeneous_flash_plan_omits_dense_shares():
+    w = random_workload(_homo(), 1 << 20, seed=0)
+    assert get_scheduler("flash").synthesize(w).nic_shares is None
+    w_het = random_workload(_homo().degrade_nic(0, 0, 0.5), 1 << 20, seed=0)
+    assert get_scheduler("flash").synthesize(w_het).nic_shares is not None
+
+
+def test_execute_plan_topology_shape_mismatch():
+    w = random_workload(_homo(), 1 << 20, seed=0)
+    plan = get_scheduler("flash").synthesize(w)
+    with pytest.raises(ValueError, match="shape"):
+        execute_plan(plan, w, topology=_homo(2, 4))
+
+
+# -- plans carry their topology --------------------------------------------
+
+def test_plan_carries_topology_and_round_trips():
+    topo = _homo().degrade_nic(0, 1, 0.5)
+    w = random_workload(topo, 4 << 20, seed=3)
+    plan = get_scheduler("flash").synthesize(w)
+    assert plan.topology == topo
+    assert plan.nic_shares is not None
+    plan2 = Plan.from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert plan2.topology == topo
+    r1 = execute_plan(plan, w)
+    r2 = execute_plan(plan2, w)
+    assert r1.completion_time == r2.completion_time
+    assert r1.breakdown == r2.breakdown
+
+
+def test_validate_rejects_plan_for_different_topology():
+    w_h = random_workload(_homo(), 4 << 20, seed=3)
+    plan = get_scheduler("flash").synthesize(w_h)
+    plan.validate(w_h)  # own fabric: fine
+    w_d = random_workload(_homo().degrade_nic(0, 0, 0.5), 4 << 20, seed=3)
+    with pytest.raises(PlanValidationError, match="different topology"):
+        plan.validate(w_d)
+
+
+def test_simulate_rejects_stale_plan_without_override():
+    """Replaying a plan after a fabric change must be loud: either
+    re-synthesize, or opt in to blindness with an explicit topology=."""
+    w_h = random_workload(_homo(), 4 << 20, seed=3)
+    plan = get_scheduler("flash").synthesize(w_h)
+    deg = _homo().degrade_nic(2, 3, 0.5)
+    w_d = random_workload(deg, 4 << 20, seed=3)
+    with pytest.raises(ValueError, match="different fabric"):
+        simulate(w_d, "flash", plan=plan)
+    # The explicit override is the sanctioned blindness experiment.
+    blind = simulate(w_d, "flash", plan=plan, topology=deg)
+    assert blind.completion_time > simulate(w_d, "flash").completion_time
+
+
+# -- PlanCache: topology keying, LRU order, counters -----------------------
+
+def test_plan_cache_misses_on_different_topology():
+    """The same traffic matrix replayed on a different fabric must miss --
+    a stale plan is never served."""
+    cache = PlanCache()
+    homo = _homo()
+    deg = homo.degrade_nic(2, 3, 0.25)
+    r_h = simulate(random_workload(homo, 4 << 20, seed=0), "flash",
+                   cache=cache)
+    assert (cache.hits, cache.misses) == (0, 1)
+    r_d = simulate(random_workload(deg, 4 << 20, seed=0), "flash",
+                   cache=cache)
+    assert (cache.hits, cache.misses) == (0, 2)
+    assert r_d.completion_time != r_h.completion_time
+    # Replays on each fabric now hit, and serve the right plan.
+    assert simulate(random_workload(deg, 4 << 20, seed=0), "flash",
+                    cache=cache).completion_time == r_d.completion_time
+    assert simulate(random_workload(homo, 4 << 20, seed=0), "flash",
+                    cache=cache).completion_time == r_h.completion_time
+    assert (cache.hits, cache.misses) == (2, 2)
+
+
+def test_traffic_fingerprint_includes_topology():
+    w_h = random_workload(_homo(), 1 << 20, seed=0)
+    w_d = random_workload(_homo().degrade_nic(0, 0, 0.5), 1 << 20, seed=0)
+    np.testing.assert_array_equal(w_h.matrix, w_d.matrix)
+    assert traffic_fingerprint(w_h, "flash") != traffic_fingerprint(
+        w_d, "flash")
+
+
+def test_plan_cache_lru_eviction_order():
+    """Eviction follows recency of *use*, not insertion order."""
+    cache = PlanCache(capacity=2)
+    ws = [random_workload(_homo(), 1 << 20, seed=s) for s in (0, 1, 2)]
+    keys = [traffic_fingerprint(w, "flash") for w in ws]
+    simulate(ws[0], "flash", cache=cache)          # store A
+    simulate(ws[1], "flash", cache=cache)          # store B
+    simulate(ws[0], "flash", cache=cache)          # touch A -> B is now LRU
+    assert (cache.hits, cache.misses) == (1, 2)
+    simulate(ws[2], "flash", cache=cache)          # store C -> evicts B
+    assert len(cache) == 2
+    assert cache.lookup(keys[0]) is not None       # A survived (was touched)
+    assert cache.lookup(keys[1]) is None           # B evicted
+    assert cache.lookup(keys[2]) is not None
+    assert (cache.hits, cache.misses) == (3, 4)
+
+
+def test_plan_cache_counters_reset_on_clear():
+    cache = PlanCache()
+    simulate(random_workload(_homo(), 1 << 20, seed=0), "flash", cache=cache)
+    assert (cache.hits, cache.misses, len(cache)) == (0, 1, 1)
+    assert cache.hit_rate == 0.0
+    simulate(random_workload(_homo(), 1 << 20, seed=0), "flash", cache=cache)
+    assert cache.hit_rate == pytest.approx(0.5)
+    cache.clear()
+    assert (cache.hits, cache.misses, len(cache)) == (0, 0, 0)
+
+
+# -- workload validation ---------------------------------------------------
+
+def test_workload_rejects_negative_entries():
+    c = ClusterSpec(2, 2)
+    m = np.ones((4, 4))
+    np.fill_diagonal(m, 0.0)
+    m[1, 2] = -5.0
+    with pytest.raises(ValueError, match="negative"):
+        Workload(c, m)
+
+
+def test_workload_rejects_self_traffic():
+    c = ClusterSpec(2, 2)
+    m = np.ones((4, 4))
+    np.fill_diagonal(m, 0.0)
+    m[3, 3] = 7.0
+    with pytest.raises(ValueError, match="diagonal"):
+        Workload(c, m)
+
+
+def test_workload_rejects_mismatched_topology():
+    c = ClusterSpec(2, 2)
+    m = np.zeros((4, 4))
+    with pytest.raises(ValueError, match="topology shape"):
+        Workload(c, m, topology=_homo(4, 8))
+
+
+def test_workload_shape_check_still_first_class():
+    with pytest.raises(ValueError, match="matrix shape"):
+        Workload(ClusterSpec(2, 2), np.zeros((3, 3)))
+
+
+# -- vectorized generators match the reference loops -----------------------
+
+def _skewed_reference(cluster, mean_size, zipf_s, seed):
+    rng = np.random.default_rng(seed)
+    n = cluster.n_gpus
+    n_pairs = n * (n - 1)
+    ranks = np.arange(1, n_pairs + 1, dtype=np.float64)
+    sizes = ranks ** (-zipf_s)
+    sizes *= (mean_size * n_pairs) / sizes.sum()
+    rng.shuffle(sizes)
+    w = np.zeros((n, n))
+    idx = [(i, j) for i in range(n) for j in range(n) if i != j]
+    for (i, j), v in zip(idx, sizes):
+        w[i, j] = v
+    return w
+
+
+def _moe_reference(cluster, tokens, bpt, top_k, skew, seed, n_experts):
+    rng = np.random.default_rng(seed)
+    n = cluster.n_gpus
+    e = n_experts or n
+    popularity = rng.dirichlet(np.full(e, skew))
+    w = np.zeros((n, n))
+    for src in range(n):
+        counts = np.zeros(e)
+        for _ in range(top_k):
+            counts += rng.multinomial(tokens, popularity)
+        for expert, c in enumerate(counts):
+            dst = expert % n
+            if dst != src and c > 0:
+                w[src, dst] += c * bpt
+    return w
+
+
+@pytest.mark.parametrize("seed", (0, 3, 11))
+def test_vectorized_skewed_matches_reference(seed):
+    c = ClusterSpec(3, 4)
+    got = skewed_workload(c, 4 << 20, 1.2, seed=seed).matrix
+    np.testing.assert_array_equal(
+        got, _skewed_reference(c, 4 << 20, 1.2, seed))
+
+
+@pytest.mark.parametrize("seed", (0, 3, 11))
+@pytest.mark.parametrize("n_experts", (None, 24))
+def test_vectorized_moe_matches_reference(seed, n_experts):
+    c = ClusterSpec(3, 4)
+    got = moe_workload(c, 512, 4096, top_k=2, seed=seed,
+                       n_experts=n_experts).matrix
+    np.testing.assert_array_equal(
+        got, _moe_reference(c, 512, 4096, 2, 0.6, seed, n_experts))
+
+
+# -- comm-layer impl resolution --------------------------------------------
+
+def test_resolve_all_to_all_auto_reads_topology():
+    from repro.comm.all_to_all import (
+        direct_all_to_all,
+        flash_all_to_all,
+        resolve_all_to_all,
+    )
+
+    het = _homo().degrade_nic(0, 0, 0.5)
+    aware = resolve_all_to_all(slow_axis="pod", ep_axes=("pod", "data"),
+                               impl="auto", topology=het)
+    assert aware.func is flash_all_to_all
+    uniform = resolve_all_to_all(slow_axis="pod", ep_axes=("pod", "data"),
+                                 impl="auto", topology=_homo())
+    assert uniform.func is direct_all_to_all
+    no_info = resolve_all_to_all(slow_axis="pod", ep_axes=("pod", "data"),
+                                 impl="auto")
+    assert no_info.func is direct_all_to_all
+
+    # The DistContext path threads its topology attribute through.
+    class _Dist:
+        slow_axis = "pod"
+        ep_axes = ("pod", "data")
+        a2a_impl = "auto"
+        topology = het
+
+    assert resolve_all_to_all(_Dist()).func is flash_all_to_all

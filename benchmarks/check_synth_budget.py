@@ -1,0 +1,54 @@
+"""CI synthesis-time regression guard.
+
+Reads a ``benchmarks.run --json`` snapshot and fails if the flash
+schedule-synthesis rows exceed generous absolute budgets.  The budgets are
+deliberately loose (several times the observed times on a laptop-class CPU)
+so CI variance never flakes, while an accidental return to interpreted
+per-stage Python -- the seed's O(n^2)-adjacency-rebuild decomposer is ~30x
+over the n=32 budget and minutes over the n=256 one -- fails loudly.
+
+Usage:  python -m benchmarks.check_synth_budget BENCH_ci.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# series name (emitted by fig17_overhead) -> budget in microseconds
+BUDGETS = {
+    "synth.servers32": 1_000_000.0,    # observed ~65ms; reference ~225ms+
+    "synth.servers256": 30_000_000.0,  # observed ~4s; reference ~minutes
+}
+
+
+def check(path: str) -> int:
+    with open(path) as f:
+        snapshot = json.load(f)
+    rows = {r["name"]: float(r["us_per_call"]) for r in snapshot["rows"]}
+    status = 0
+    for name, budget in sorted(BUDGETS.items()):
+        us = rows.get(name)
+        if us is None:
+            print(f"FAIL {name}: missing from {path} (benchmark renamed or "
+                  "skipped?)")
+            status = 1
+        elif us > budget:
+            print(f"FAIL {name}: {us / 1e6:.2f}s exceeds the "
+                  f"{budget / 1e6:.2f}s budget")
+            status = 1
+        else:
+            print(f"ok   {name}: {us / 1e6:.3f}s <= {budget / 1e6:.2f}s")
+    return status
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("path", help="BENCH_*.json snapshot to check")
+    args = parser.parse_args(argv)
+    sys.exit(check(args.path))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,13 @@
 """Paper Fig 15: scaling servers (8 GPUs each) and GPUs-per-server (8
-servers), 100 Gbps RoCE + 900 GB/s NVSwitch-class intra fabric."""
+servers), 100 Gbps RoCE + 900 GB/s NVSwitch-class intra fabric; plus the
+old-vs-new synthesis-time curve over the same server sweep."""
 
 from __future__ import annotations
 
 from repro.core import ClusterSpec, random_workload, simulate
+from repro.core.birkhoff import birkhoff_decompose
 
-from .common import Csv
+from .common import Csv, time_us
 
 HW = dict(b_intra=900e9 / 8, b_inter=12.5e9, alpha=10e-6,
           intra_topology="switch")
@@ -22,6 +24,15 @@ def run(csv: Csv):
                  f"algbw_gbps={flash.algbw_gbps():.2f}"
                  f"|opt_frac={flash.algbw / opt.algbw:.3f}"
                  f"|vs_mpi={flash.algbw / mpi.algbw:.2f}x")
+        # synthesis engine trajectory on the same sweep: incremental
+        # (bit-identical at these sizes) vs the seed's reference decomposer
+        t_server = w.server_matrix()
+        new_us = time_us(lambda: birkhoff_decompose(t_server), repeats=3)
+        ref_us = time_us(lambda: birkhoff_decompose(t_server,
+                                                    reference=True),
+                         repeats=1, warmup=0)
+        csv.emit(f"fig15.synth.servers{n}", new_us,
+                 f"ref_us={ref_us:.1f}|speedup={ref_us / new_us:.1f}x")
     for m in (2, 4, 8, 16):
         cluster = ClusterSpec(n_servers=8, m_gpus=m, **HW)
         w = random_workload(cluster, 16 << 20, seed=1)

@@ -1,6 +1,14 @@
 """Paper Fig 17: (a) schedule-synthesis time vs cluster size; (b) memory
 footprint slope vs workload bytes; plus the beyond-paper PlanCache row
-(dynamic-MoE re-synthesis skipped on repeated traffic fingerprints)."""
+(dynamic-MoE re-synthesis skipped on repeated traffic fingerprints) and the
+warm-started near-miss repair row.
+
+The synthesis sweep reports the incremental engine (``fig17a.synth.*`` /
+``synth.*``) against the pre-rewrite reference decomposer (``ref_us``) up to
+50 servers, and extends to 128/256/512 servers where the reference is
+minutes-slow and only the new engine is timed.  The ``synth.servers{n}``
+alias series feeds the CI regression guard (check_synth_budget.py).
+"""
 
 from __future__ import annotations
 
@@ -14,21 +22,59 @@ from repro.core import (
     random_workload,
     simulate,
 )
+from repro.core.birkhoff import birkhoff_decompose
+from repro.core.traffic import Workload
 
 from .common import Csv, time_us
+
+# (servers, timing repeats, time the reference decomposer too?)
+SYNTH_SWEEP = (
+    (3, 3, True),
+    (4, 3, True),
+    (8, 3, True),
+    (16, 3, True),
+    (32, 3, True),
+    (50, 3, True),
+    (128, 1, False),
+    (256, 1, False),
+    (512, 1, False),
+)
 
 
 def run(csv: Csv):
     flash = get_scheduler("flash")
-    # (a) synthesis wall-time: paper reports ~15-32us at small scale,
-    # <1ms for <10 servers, <0.25s for <50 servers (O(n^4.5-5) in servers)
-    for n in (3, 4, 8, 16, 32, 50):
+    # (a) synthesis wall-time: paper reports ~15-32us at small scale, <1ms
+    # for <10 servers, <0.25s for <50 servers.  The incremental engine is
+    # exact (bit-identical stages) through 32 servers and switches to the
+    # repair policy beyond; the reference column is the seed's interpreted
+    # decomposer.
+    for n, repeats, with_ref in SYNTH_SWEEP:
         cluster = ClusterSpec(n_servers=n, m_gpus=8)
         w = random_workload(cluster, 4 << 20, seed=0)
-        us = time_us(lambda: flash.synthesize(w), repeats=3)
-        plan = flash.synthesize(w)
+        timed = {}  # keep the last synthesized plan: n=512 costs ~40s/run
+
+        def synth(w=w, timed=timed):
+            timed["plan"] = flash.synthesize(w)
+
+        us = time_us(synth, repeats=repeats,
+                     warmup=1 if repeats > 1 else 0)
+        plan = timed["plan"]
+        derived = ""
+        if with_ref:
+            # engine-vs-engine column: decompose only, so the ratio is not
+            # diluted by the (shared) load-balance/fingerprint overhead
+            t_server = w.server_matrix()
+            new_us = time_us(lambda: birkhoff_decompose(t_server),
+                             repeats=repeats, warmup=0)
+            ref_us = time_us(
+                lambda: birkhoff_decompose(t_server, reference=True),
+                repeats=1, warmup=0)
+            derived = (f"engine_us={new_us:.1f}|ref_us={ref_us:.1f}"
+                       f"|speedup={ref_us / new_us:.1f}x|")
         csv.emit(f"fig17a.synth.servers{n}", us,
-                 f"n_stages={plan.n_stages}")
+                 derived + f"n_stages={plan.n_stages}")
+        # stable alias series consumed by the CI synthesis budget guard
+        csv.emit(f"synth.servers{n}", us)
     # (a') PlanCache: iterations whose MoE gating signature repeats skip
     # synthesis entirely -- cached lookup vs fresh synthesis wall time.
     cluster = ClusterSpec(n_servers=8, m_gpus=8)
@@ -41,6 +87,27 @@ def run(csv: Csv):
              f"fresh_us={us_fresh:.1f}"
              f"|speedup={us_fresh / max(us_cached, 1e-9):.1f}x"
              f"|hits={cache.hits}|misses={cache.misses}")
+    # (a'') warm-started near-miss repair: a small MoE routing drift costs
+    # a slot-refill pass seeded with the cached plan's permutations, not a
+    # cold synthesis (PlanCache(warm_start=True) path).
+    cluster = ClusterSpec(n_servers=32, m_gpus=8)
+    w1 = moe_workload(cluster, 8192, 4096, top_k=2, seed=0)
+    rng = np.random.default_rng(7)
+    m2 = w1.matrix.copy()
+    drift = rng.random(m2.shape) < 0.02
+    m2[drift] *= rng.uniform(0.8, 1.2, size=int(drift.sum()))
+    np.fill_diagonal(m2, 0.0)
+    w2 = Workload(cluster, m2)
+    prev = flash.synthesize(w1)
+    us_warm = time_us(lambda: flash.repair_plan(prev, w2), repeats=3)
+    us_cold = time_us(lambda: flash.synthesize(w2), repeats=3)
+    warm_t = simulate(w2, "flash", plan=flash.repair_plan(prev, w2))
+    cold_t = simulate(w2, "flash", plan=flash.synthesize(w2))
+    csv.emit("fig17a.warm_resynthesis", us_warm,
+             f"cold_us={us_cold:.1f}"
+             f"|speedup={us_cold / max(us_warm, 1e-9):.1f}x"
+             f"|quality_vs_cold="
+             f"{warm_t.completion_time / cold_t.completion_time:.3f}")
     # (b) memory slope: baseline 2.0x, FLASH ~2.6x
     cluster = ClusterSpec(n_servers=4, m_gpus=8)
     sizes = [4 << 20, 16 << 20, 64 << 20]

@@ -30,17 +30,28 @@ from . import (
 from .common import Csv
 
 
+MODULES = (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
+           fig16_topo, fig17_overhead, fig_hetero, roofline_table)
+
+
 def main(argv=None) -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument(
         "--json", default="BENCH_latest.json", metavar="PATH",
         help="write a machine-readable snapshot here ('' to disable)")
+    parser.add_argument(
+        "--only", default="", metavar="SUBSTR",
+        help="run only modules whose name contains SUBSTR "
+             "(e.g. 'fig17' for the synthesis/overhead rows)")
     args = parser.parse_args(argv)
 
+    mods = [m for m in MODULES if args.only in m.__name__]
+    if not mods:
+        names = ", ".join(m.__name__.rsplit(".", 1)[-1] for m in MODULES)
+        parser.error(f"--only {args.only!r} matches none of: {names}")
     csv = Csv()
     print("name,us_per_call,derived")
-    for mod in (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
-                fig16_topo, fig17_overhead, fig_hetero, roofline_table):
+    for mod in mods:
         mod.run(csv)
     if args.json:
         csv.write_json(args.json)

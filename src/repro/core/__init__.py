@@ -22,6 +22,7 @@ from .plan import (
     PlanValidationError,
     RailStage,
     RedistributePhase,
+    cluster_family_key,
     traffic_fingerprint,
 )
 from .schedulers import (
@@ -55,6 +56,7 @@ __all__ = [
     "t_optimal",
     "Plan",
     "PlanCache",
+    "cluster_family_key",
     "PlanValidationError",
     "traffic_fingerprint",
     "LoadBalancePhase",

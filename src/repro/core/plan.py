@@ -54,6 +54,7 @@ __all__ = [
     "PlanValidationError",
     "PlanCache",
     "traffic_fingerprint",
+    "cluster_family_key",
     "LoadBalancePhase",
     "PermutationStage",
     "BarrierStage",
@@ -476,6 +477,25 @@ class Plan:
 
 # -- synthesis caching ----------------------------------------------------
 
+def cluster_family_key(w: Workload, algorithm: str = "") -> str:
+    """Fingerprint of (cluster, topology, algorithm) *without* the traffic
+    matrix: every workload of a job on a fixed fabric shares it.
+
+    PlanCache's warm-start path uses it to find "the most recent plan for
+    this cluster and algorithm" when the exact traffic fingerprint misses --
+    dynamic MoE traffic rarely repeats exactly, but consecutive iterations
+    are near-misses that can seed a repair instead of a cold synthesis.
+    The ClusterSpec scalars are hashed alongside the topology fingerprint
+    because repair requires the previous plan's cluster to match exactly
+    (e.g. two specs can share a fabric but differ in alpha).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr(dataclasses.astuple(w.cluster)).encode())
+    h.update(w.topo.fingerprint().encode())
+    h.update(algorithm.encode())
+    return h.hexdigest()
+
+
 def traffic_fingerprint(w: Workload, algorithm: str = "") -> str:
     """Stable fingerprint of (traffic matrix, topology, algorithm).
 
@@ -504,15 +524,29 @@ class PlanCache:
     -- and expert-routing signatures repeat across iterations.  ``lookup``
     /``get_or_synthesize`` skip re-synthesis on a repeated fingerprint and
     expose hit/miss counters for the reuse-rate telemetry.
+
+    With ``warm_start=True``, an exact-fingerprint miss falls back to the
+    most recent cached plan for the same (cluster, topology, algorithm)
+    family: schedulers exposing ``repair_plan`` (FLASH) then seed the new
+    plan with the cached plan's permutations and synthesize only the
+    traffic delta, so a small MoE routing shift costs a repair instead of a
+    cold synthesis.  Warm repairs still count as misses (a fresh plan is
+    produced) and are tallied separately in ``warm_hits``.  Off by default:
+    a repaired plan is byte-conserving and incast-free but generally a
+    slightly longer stage list than cold synthesis, so reuse-vs-quality is
+    an explicit opt-in.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, warm_start: bool = False):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
+        self.warm_start = warm_start
         self._store: "OrderedDict[str, Plan]" = OrderedDict()
+        self._family: Dict[str, str] = {}  # family key -> latest exact key
         self.hits = 0
         self.misses = 0
+        self.warm_hits = 0
 
     def __len__(self) -> int:
         return len(self._store)
@@ -524,8 +558,10 @@ class PlanCache:
 
     def clear(self) -> None:
         self._store.clear()
+        self._family.clear()
         self.hits = 0
         self.misses = 0
+        self.warm_hits = 0
 
     def lookup(self, key: str) -> Optional[Plan]:
         plan = self._store.get(key)
@@ -543,10 +579,33 @@ class PlanCache:
             self._store.popitem(last=False)
 
     def get_or_synthesize(self, scheduler, w: Workload) -> Plan:
-        """Return the cached Plan for (w, scheduler) or synthesize + cache."""
+        """Return the cached Plan for (w, scheduler) or synthesize + cache.
+
+        On an exact miss with ``warm_start`` enabled, a same-family cached
+        plan seeds ``scheduler.repair_plan`` instead of a cold synthesis.
+        """
         key = traffic_fingerprint(w, scheduler.name)
         plan = self.lookup(key)
         if plan is None:
-            plan = scheduler.synthesize(w, fingerprint=key)
+            family = cluster_family_key(w, scheduler.name)
+            prev = None
+            if self.warm_start and hasattr(scheduler, "try_repair_plan"):
+                prev = self._store.get(self._family.get(family, ""))
+                # The family key pins (cluster, topology, algorithm), but a
+                # stale or hand-inserted entry must degrade to cold, never
+                # propagate a repair error out of a cache lookup.
+                if prev is not None and (prev.cluster != w.cluster or
+                                         prev.topo.fingerprint()
+                                         != w.topo.fingerprint()):
+                    prev = None
+            if prev is not None:
+                plan = scheduler.try_repair_plan(prev, w, fingerprint=key)
+                if plan is not None:
+                    self.warm_hits += 1
+            else:
+                plan = None
+            if plan is None:
+                plan = scheduler.synthesize(w, fingerprint=key)
             self.insert(key, plan)
+            self._family[family] = key
         return plan

@@ -117,6 +117,12 @@ class Scheduler(abc.ABC):
         t0 = time.perf_counter()
         out = self.plan_phases(w)
         synth = time.perf_counter() - t0
+        return self._build_plan(w, out, synth, fingerprint)
+
+    def _build_plan(self, w: Workload, out, synth: float,
+                    fingerprint: Optional[str]) -> Plan:
+        """Wrap a ``plan_phases``-shaped result into a Plan (shared by the
+        cold synthesize and warm repair paths)."""
         phases, extra_mem = out[0], out[1]
         nic_shares = out[2] if len(out) > 2 else None
         # Fingerprint hashing (O(matrix bytes)) stays outside the timed
@@ -151,9 +157,17 @@ class FlashScheduler(Scheduler):
     accounts_intra = True
 
     def plan_phases(self, w: Workload):
+        t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
+        stages = birkhoff_decompose(t_server, sort_ascending=True,
+                                    coalesce=True)
+        return self._phases_from_stages(w, t_server, s_intra, stages)
+
+    def _phases_from_stages(self, w: Workload, t_server: np.ndarray,
+                            s_intra: np.ndarray, stages):
+        """Wrap a Birkhoff stage list (cold-synthesized or warm-repaired)
+        into the three-phase FLASH plan for workload ``w``."""
         cluster = w.cluster
         n, m = cluster.n_servers, cluster.m_gpus
-        t_server, s_intra = server_reduce(w.matrix, m)
 
         # Load-balance phase: per (server, gpu), how many bytes must this
         # GPU shed so that every local GPU holds exactly its rail's share
@@ -169,8 +183,6 @@ class FlashScheduler(Scheduler):
         excess[np.arange(n), :, np.arange(n)] = 0.0  # intra not balanced
         lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
 
-        stages = birkhoff_decompose(t_server, sort_ascending=True,
-                                    coalesce=True)
         phases = [LoadBalancePhase(moved_per_gpu=lb_moved, charge_alpha=True)]
         phases += [PermutationStage(perm=s.perm, size=s.size, sent=s.sent)
                    for s in stages]
@@ -189,6 +201,84 @@ class FlashScheduler(Scheduler):
         if w.topo.is_homogeneous:
             return tuple(phases), extra_mem
         return tuple(phases), extra_mem, shares
+
+    def try_repair_plan(self, prev: Plan, w: Workload,
+                        fingerprint: Optional[str] = None) -> Optional[Plan]:
+        """Warm-started re-synthesis: seed the new plan with the previous
+        plan's permutations instead of a cold Birkhoff decomposition.
+
+        The near-miss path for dynamic MoE (paper Fig 4): when traffic
+        shifts a little between iterations, the old stage list is almost
+        right -- so each previous permutation stage is reused as-is, its
+        slots refilled with the new matrix's bytes (capped by the slot
+        size), and only the residual that did not fit is decomposed fresh.
+        A small shift therefore costs a fill pass plus a tiny decomposition
+        instead of a full synthesis.  The result is a valid FLASH plan
+        (byte-conserving, incast-free) but generally a different -- and
+        slightly longer -- stage list than cold synthesis; PlanCache only
+        takes this path when explicitly enabled (``warm_start=True``).
+
+        Returns None when the shift is no near-miss (the caller should
+        cold-synthesize): too much traffic falls outside the old
+        permutations, or chained repairs would drift far past the Birkhoff
+        stage bound.
+        """
+        if prev.algorithm != self.name:
+            raise ValueError(
+                f"cannot warm-start {self.name!r} from a {prev.algorithm!r} "
+                "plan")
+        if prev.cluster != w.cluster or \
+                prev.topo.fingerprint() != w.topo.fingerprint():
+            raise ValueError(
+                "warm-start requires the previous plan's (cluster, "
+                "topology) to match the new workload's fabric")
+        t0 = time.perf_counter()
+        n = w.cluster.n_servers
+        t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
+        remaining = t_server.copy()
+        reused = []
+        for p in prev.phases:
+            if not isinstance(p, PermutationStage):
+                continue
+            perm = np.asarray(p.perm, dtype=np.int64)
+            li = np.flatnonzero(perm >= 0)
+            lj = perm[li]
+            take = np.minimum(remaining[li, lj], p.size)
+            remaining[li, lj] -= take
+            # The slot only needs to fit the largest refilled payload:
+            # shrinking it sheds the padding a traffic *decrease* left
+            # behind (an increase lands in the residual decomposition).
+            size = float(take.max(initial=0.0))
+            if size <= 0.0:  # stage carries nothing anymore: drop it
+                continue
+            sent = np.zeros(n)
+            sent[li] = take
+            reused.append(Stage(perm=p.perm, size=size,
+                                sent=tuple(sent.tolist())))
+        if float(remaining.sum()) > 0.25 * max(float(t_server.sum()), 1.0):
+            # Too much traffic fell outside the old permutations: a
+            # repaired plan would be far from the cold optimum.
+            return None
+        residual = birkhoff_decompose(remaining, sort_ascending=True,
+                                      coalesce=True)
+        stages = sorted(reused + residual, key=lambda s: s.size)
+        if len(stages) > 2 * (n * n - 2 * n + 2):
+            # Chained repairs accumulate residual slivers; reset before the
+            # stage count (and its per-stage wakeup cost) drifts.
+            return None
+        out = self._phases_from_stages(w, t_server, s_intra, stages)
+        return self._build_plan(w, out, time.perf_counter() - t0,
+                                fingerprint)
+
+    def repair_plan(self, prev: Plan, w: Workload,
+                    fingerprint: Optional[str] = None) -> Plan:
+        """``try_repair_plan`` with a cold-synthesis fallback: always
+        returns a valid plan for ``w`` (repaired on a near-miss, fresh
+        otherwise)."""
+        plan = self.try_repair_plan(prev, w, fingerprint=fingerprint)
+        if plan is None:
+            plan = self.synthesize(w, fingerprint=fingerprint)
+        return plan
 
 
 # -- FanOut ----------------------------------------------------------------
@@ -321,21 +411,36 @@ def optimal_completion_time(w: Workload) -> float:
 
 
 def synthesis_time(
-    n_servers: int,
-    m_gpus: int = 8,
+    n_servers: Optional[int] = None,
+    m_gpus: Optional[int] = None,
     seed: int = 0,
     workload: Optional[Workload] = None,
 ) -> float:
     """Measure FLASH schedule-synthesis wall time for a random workload.
 
     Used by benchmarks/fig17_overhead.py to reproduce the scheduling-time
-    claim (us-scale vs TACCL's minutes-to-hours).
+    claim (us-scale vs TACCL's minutes-to-hours).  Pass either a cluster
+    shape (``n_servers``/``m_gpus``) for a generated workload, or an
+    explicit ``workload=``; shape arguments that conflict with an explicit
+    workload raise instead of being silently ignored.
     """
     from .traffic import random_workload
 
     if workload is None:
-        cluster = ClusterSpec(n_servers=n_servers, m_gpus=m_gpus)
+        if n_servers is None:
+            raise ValueError("pass n_servers (and optionally m_gpus) or "
+                             "an explicit workload=")
+        cluster = ClusterSpec(n_servers=n_servers,
+                              m_gpus=8 if m_gpus is None else m_gpus)
         workload = random_workload(cluster, mean_size=1 << 20, seed=seed)
+    else:
+        c = workload.cluster
+        if (n_servers is not None and n_servers != c.n_servers) or \
+                (m_gpus is not None and m_gpus != c.m_gpus):
+            raise ValueError(
+                f"conflicting arguments: workload= runs on "
+                f"({c.n_servers} servers, {c.m_gpus} GPUs) but "
+                f"n_servers={n_servers}, m_gpus={m_gpus} were also given")
     return FlashScheduler().synthesize(workload).synth_seconds
 
 

@@ -112,3 +112,153 @@ def test_rejects_nonzero_diagonal():
 
 def test_empty_and_zero():
     assert birkhoff_decompose(np.zeros((4, 4))) == []
+
+
+# -- engine identity and repair-policy properties (PR 3) -------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(_matrices())
+def test_incremental_engine_identical_to_reference(t):
+    """The exact engine's stage lists are bit-identical to the golden
+    reference (same perms, sizes and sent tuples, in the same order)."""
+    fast = birkhoff_decompose(t.copy(), policy="exact")
+    ref = birkhoff_decompose(t.copy(), reference=True)
+    assert fast == ref
+
+
+@settings(max_examples=40, deadline=None)
+@given(_matrices())
+def test_repair_policy_conserves_bytes_on_support(t):
+    """Repair-policy stages conserve bytes exactly on the support of T and
+    never exceed the n^2 - 2n + 2 stage bound (issue satellite)."""
+    n = t.shape[0]
+    stages = birkhoff_decompose(t.copy(), policy="repair")
+    recon = sum((s.as_matrix(n) for s in stages), np.zeros_like(t))
+    np.testing.assert_allclose(recon, t, atol=1e-6 * max(t.max(), 1.0))
+    # no traffic invented outside the support
+    assert np.all(recon[t == 0] <= 1e-6 * max(t.max(), 1.0))
+    assert len(stages) <= n * n - 2 * n + 2
+    for s in stages:
+        dsts = [j for j in s.perm if j >= 0]
+        assert len(dsts) == len(set(dsts))
+        assert all(i != j for i, j in enumerate(s.perm))
+
+
+def test_repair_policy_preserves_makespan_optimality():
+    rng = np.random.default_rng(3)
+    t = rng.uniform(0, 1e6, (12, 12))
+    np.fill_diagonal(t, 0.0)
+    stages = birkhoff_decompose(t.copy(), policy="repair")
+    makespan = sum(s.size for s in stages)
+    assert abs(makespan - max_line_sum(t)) <= 1e-9 * max_line_sum(t)
+
+
+def test_auto_policy_matches_exact_below_threshold():
+    from repro.core.birkhoff import AUTO_EXACT_MAX_N
+
+    rng = np.random.default_rng(4)
+    n = min(8, AUTO_EXACT_MAX_N)
+    t = rng.uniform(0, 100, (n, n))
+    np.fill_diagonal(t, 0.0)
+    assert birkhoff_decompose(t.copy()) == \
+        birkhoff_decompose(t.copy(), policy="exact")
+
+
+def test_unknown_policy_raises():
+    t = np.array([[0.0, 1.0], [1.0, 0.0]])
+    with pytest.raises(ValueError, match="unknown policy"):
+        birkhoff_decompose(t, policy="bogus")
+
+
+# -- Stage satellite: vectorized as_matrix + shape validation --------------
+
+
+def test_stage_as_matrix_matches_per_entry_reference():
+    from repro.core.birkhoff import Stage
+
+    s = Stage(perm=(2, -1, 0, 1), size=8.0, sent=(5.0, 0.0, 8.0, 2.5))
+    got = s.as_matrix(4)
+    ref = np.zeros((4, 4))
+    for i, j in enumerate(s.perm):
+        if j >= 0:
+            ref[i, j] = s.sent[i]
+    np.testing.assert_array_equal(got, ref)
+    assert s.active == 3
+    assert s.real_bytes == 15.5
+
+
+def test_stage_rejects_mismatched_perm_sent_lengths():
+    from repro.core.birkhoff import Stage
+
+    with pytest.raises(ValueError, match="slots"):
+        Stage(perm=(1, 0), size=4.0, sent=(4.0,))
+
+
+# -- padding satellite: already-balanced and all-zero matrices -------------
+
+
+def test_padding_of_already_balanced_matrix_is_zero():
+    # circulant: every row and column already sums to the same value
+    t = np.array([[0.0, 3.0, 5.0],
+                  [5.0, 0.0, 3.0],
+                  [3.0, 5.0, 0.0]])
+    pad = pad_to_doubly_balanced(t)
+    np.testing.assert_array_equal(pad, np.zeros_like(t))
+
+
+def test_padding_of_all_zero_matrix_is_zero():
+    t = np.zeros((4, 4))
+    pad = pad_to_doubly_balanced(t)
+    np.testing.assert_array_equal(pad, np.zeros_like(t))
+    assert birkhoff_decompose(t) == []
+
+
+# -- _greedy_drain satellite: the float-erosion fallback -------------------
+
+
+def test_greedy_drain_routes_remaining_entries():
+    from repro.core.birkhoff import _greedy_drain
+
+    real = np.array([[0.0, 7.0, 0.0],
+                     [0.0, 0.0, 3.0],
+                     [0.5, 0.0, 0.0]])
+    stages = []
+    _greedy_drain(real, stages, eps=1e-9)
+    assert len(stages) == 3  # one stage per surviving entry
+    np.testing.assert_array_equal(real, np.zeros_like(real))
+    total = sum(s.real_bytes for s in stages)
+    assert total == 7.0 + 3.0 + 0.5
+    for s in stages:
+        assert s.active == 1
+        assert s.size == s.real_bytes  # single-flow stages
+
+
+def test_greedy_drain_ignores_subthreshold_residue():
+    from repro.core.birkhoff import _greedy_drain
+
+    real = np.array([[0.0, 1e-15], [2.0, 0.0]])
+    stages = []
+    _greedy_drain(real, stages, eps=1e-9)
+    assert len(stages) == 1
+    assert stages[0].perm == (-1, 0)
+    assert real[0, 1] == 1e-15  # below eps: left in place, not routed
+
+
+def test_decompose_falls_back_to_drain_when_matching_erodes(monkeypatch):
+    """Simulate float erosion: if the matching ends imperfect, the engine
+    must still route all genuine bytes via the greedy-drain fallback."""
+    import repro.core.birkhoff as B
+
+    def no_augment(adj, match_l, match_r):
+        return None  # leave the greedy matching unrepaired
+
+    monkeypatch.setattr(B, "_augment_phases", no_augment)
+    rng = np.random.default_rng(5)
+    n = 6
+    # sparse support: the first-fit greedy is imperfect on some stage
+    t = rng.uniform(0, 100, (n, n)) * (rng.random((n, n)) < 0.5)
+    np.fill_diagonal(t, 0.0)
+    stages = B.birkhoff_decompose(t.copy(), policy="exact")
+    recon = sum((s.as_matrix(n) for s in stages), np.zeros_like(t))
+    np.testing.assert_allclose(recon, t, atol=1e-6 * max(t.max(), 1.0))

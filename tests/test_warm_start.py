@@ -1,0 +1,182 @@
+"""Warm-started re-synthesis tests: FlashScheduler.repair_plan seeds a new
+plan with a previous plan's permutations, and PlanCache's opt-in near-miss
+path routes exact-fingerprint misses through it (issue 3 tentpole, part 3).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    PlanCache,
+    Topology,
+    cluster_family_key,
+    get_scheduler,
+    moe_workload,
+    simulate,
+    synthesis_time,
+    traffic_fingerprint,
+)
+from repro.core.traffic import Workload
+
+C = ClusterSpec(n_servers=8, m_gpus=8)
+
+
+def _near_miss(w, seed=7, frac=0.02, jitter=0.2):
+    """Perturb a small fraction of pairs by a small factor (MoE drift)."""
+    rng = np.random.default_rng(seed)
+    m = w.matrix.copy()
+    sel = rng.random(m.shape) < frac
+    m[sel] *= rng.uniform(1 - jitter, 1 + jitter, size=int(sel.sum()))
+    np.fill_diagonal(m, 0.0)
+    return Workload(w.cluster, m, w.topology)
+
+
+def test_repair_plan_conserves_bytes_and_validates():
+    flash = get_scheduler("flash")
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=0)
+    w2 = _near_miss(w1)
+    prev = flash.synthesize(w1)
+    warm = flash.repair_plan(prev, w2)
+    warm.validate(w2)  # byte conservation + incast-free + topology match
+    assert warm.algorithm == "flash"
+    assert warm.synth_seconds > 0
+    r = simulate(w2, "flash", plan=warm)
+    assert np.isfinite(r.completion_time) and r.completion_time > 0
+
+
+def test_repair_plan_quality_close_to_cold_on_near_miss():
+    flash = get_scheduler("flash")
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=1)
+    w2 = _near_miss(w1, seed=11)
+    warm = flash.repair_plan(flash.synthesize(w1), w2)
+    cold = flash.synthesize(w2)
+    t_warm = simulate(w2, "flash", plan=warm).completion_time
+    t_cold = simulate(w2, "flash", plan=cold).completion_time
+    # a small drift must not cost more than a modest quality factor
+    assert t_warm <= 1.5 * t_cold
+
+
+def test_repair_plan_falls_back_to_cold_on_large_shift():
+    """A 100x traffic surge is no near-miss (the old slots hold a sliver of
+    it): repair_plan must return a cold-quality plan, not a patched one."""
+    flash = get_scheduler("flash")
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=2)
+    w2 = Workload(C, w1.matrix * 100.0)
+    warm = flash.repair_plan(flash.synthesize(w1), w2)
+    cold = flash.synthesize(w2)
+    assert warm.n_stages == cold.n_stages
+    assert [p.to_dict() for p in warm.phases] == \
+        [p.to_dict() for p in cold.phases]
+    warm.validate(w2)
+
+
+def test_repair_plan_rejects_mismatched_fabric():
+    flash = get_scheduler("flash")
+    prev = flash.synthesize(moe_workload(C, 8192, 4096, top_k=2, seed=0))
+    other = ClusterSpec(n_servers=4, m_gpus=8)
+    with pytest.raises(ValueError, match="warm-start"):
+        flash.repair_plan(prev, moe_workload(other, 8192, 4096, seed=0))
+    degraded = Topology.from_cluster(C).degrade_nic(0, 0, factor=0.25)
+    w_deg = moe_workload(degraded, 8192, 4096, top_k=2, seed=0)
+    with pytest.raises(ValueError, match="warm-start"):
+        flash.repair_plan(prev, w_deg)
+
+
+def test_plan_cache_warm_start_repairs_on_near_miss():
+    cache = PlanCache(warm_start=True)
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=4)
+    w2 = _near_miss(w1, seed=13)
+    simulate(w1, "flash", cache=cache)
+    assert (cache.hits, cache.misses, cache.warm_hits) == (0, 1, 0)
+    simulate(w2, "flash", cache=cache)
+    assert (cache.hits, cache.misses, cache.warm_hits) == (0, 2, 1)
+    # the repaired plan is cached under the exact fingerprint: replay hits
+    simulate(w2, "flash", cache=cache)
+    assert (cache.hits, cache.misses, cache.warm_hits) == (1, 2, 1)
+
+
+def test_plan_cache_warm_start_off_by_default():
+    cache = PlanCache()
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=5)
+    simulate(w1, "flash", cache=cache)
+    simulate(w2 := _near_miss(w1, seed=17), "flash", cache=cache)
+    assert cache.warm_hits == 0 and cache.misses == 2
+    # same family, different exact fingerprints
+    assert cluster_family_key(w1, "flash") == cluster_family_key(w2, "flash")
+    assert traffic_fingerprint(w1, "flash") != traffic_fingerprint(w2, "flash")
+
+
+def test_plan_cache_warm_start_ignores_other_algorithms():
+    """Schedulers without repair_plan keep cold-synthesizing."""
+    cache = PlanCache(warm_start=True)
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=6)
+    simulate(w1, "spreadout", cache=cache)
+    simulate(_near_miss(w1, seed=19), "spreadout", cache=cache)
+    assert cache.warm_hits == 0 and cache.misses == 2
+
+
+def test_plan_cache_clear_resets_warm_state():
+    cache = PlanCache(warm_start=True)
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=8)
+    simulate(w1, "flash", cache=cache)
+    cache.clear()
+    assert (cache.hits, cache.misses, cache.warm_hits) == (0, 0, 0)
+    # family index cleared too: the next miss cold-synthesizes
+    simulate(_near_miss(w1, seed=23), "flash", cache=cache)
+    assert cache.warm_hits == 0
+
+
+# -- synthesis_time argument validation (issue satellite) ------------------
+
+
+def test_synthesis_time_accepts_shape_or_workload():
+    assert synthesis_time(n_servers=3) > 0
+    w = moe_workload(C, 1024, 512, top_k=2, seed=0)
+    assert synthesis_time(workload=w) > 0
+    # matching explicit shape is fine
+    assert synthesis_time(n_servers=8, m_gpus=8, workload=w) > 0
+
+
+def test_synthesis_time_rejects_conflicting_arguments():
+    w = moe_workload(C, 1024, 512, top_k=2, seed=0)
+    with pytest.raises(ValueError, match="conflicting"):
+        synthesis_time(n_servers=4, workload=w)
+    with pytest.raises(ValueError, match="conflicting"):
+        synthesis_time(n_servers=8, m_gpus=4, workload=w)
+    with pytest.raises(ValueError, match="n_servers"):
+        synthesis_time()
+
+
+def test_plan_cache_warm_start_survives_same_fabric_different_alpha():
+    """Two ClusterSpecs can share a fabric fingerprint but differ in
+    scalars repair cannot bridge (e.g. alpha): the cache must degrade to a
+    cold synthesis, never raise out of a lookup (review regression)."""
+    cache = PlanCache(warm_start=True)
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=9)
+    c_alpha = ClusterSpec(n_servers=8, m_gpus=8, alpha=20e-6)
+    w2 = moe_workload(c_alpha, 8192, 4096, top_k=2, seed=9)
+    simulate(w1, "flash", cache=cache)
+    simulate(w2, "flash", cache=cache)  # must not raise
+    assert cache.warm_hits == 0 and cache.misses == 2
+
+
+def test_plan_cache_warm_hits_not_counted_on_cold_fallback():
+    """A large shift makes try_repair_plan bail: the plan served is cold
+    and warm_hits must say so (review regression)."""
+    cache = PlanCache(warm_start=True)
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=10)
+    w2 = Workload(C, w1.matrix * 100.0)  # 100x surge: no near-miss
+    simulate(w1, "flash", cache=cache)
+    simulate(w2, "flash", cache=cache)
+    assert cache.warm_hits == 0 and cache.misses == 2
+
+
+def test_try_repair_plan_returns_none_on_large_shift():
+    flash = get_scheduler("flash")
+    w1 = moe_workload(C, 8192, 4096, top_k=2, seed=2)
+    prev = flash.synthesize(w1)
+    assert flash.try_repair_plan(prev, Workload(C, w1.matrix * 100.0)) is None
+    near = flash.try_repair_plan(prev, _near_miss(w1, seed=29))
+    assert near is not None
+    near.validate(_near_miss(w1, seed=29))

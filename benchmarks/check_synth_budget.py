@@ -7,6 +7,12 @@ so CI variance never flakes, while an accidental return to interpreted
 per-stage Python -- the seed's O(n^2)-adjacency-rebuild decomposer is ~30x
 over the n=32 budget and minutes over the n=256 one -- fails loudly.
 
+The ``synth.hetero{n}`` rows (emitted by fig_hetero) additionally guard the
+*relative* cost of capacity-aware synthesis: flash_ca must stay within 2x
+of blind flash synthesis on the same degraded-NIC fabric (observed ~1.3x;
+the time-domain decomposition shares the blind engines' matching machinery,
+so a larger ratio means an accidental extra pass crept in).
+
 Usage:  python -m benchmarks.check_synth_budget BENCH_ci.json
 """
 
@@ -22,24 +28,48 @@ BUDGETS = {
     "synth.servers256": 30_000_000.0,  # observed ~4s; reference ~minutes
 }
 
+# series name (emitted by fig_hetero) -> max us_per_call / derived[blind_us]
+RATIO_BUDGETS = {
+    "synth.hetero16": 2.0,  # observed ~1.3x
+    "synth.hetero32": 2.0,  # observed ~1.3x
+}
+
 
 def check(path: str) -> int:
     with open(path) as f:
         snapshot = json.load(f)
-    rows = {r["name"]: float(r["us_per_call"]) for r in snapshot["rows"]}
+    records = {r["name"]: r for r in snapshot["rows"]}
     status = 0
     for name, budget in sorted(BUDGETS.items()):
-        us = rows.get(name)
-        if us is None:
+        rec = records.get(name)
+        if rec is None:
             print(f"FAIL {name}: missing from {path} (benchmark renamed or "
                   "skipped?)")
             status = 1
-        elif us > budget:
+            continue
+        us = float(rec["us_per_call"])
+        if us > budget:
             print(f"FAIL {name}: {us / 1e6:.2f}s exceeds the "
                   f"{budget / 1e6:.2f}s budget")
             status = 1
         else:
             print(f"ok   {name}: {us / 1e6:.3f}s <= {budget / 1e6:.2f}s")
+    for name, max_ratio in sorted(RATIO_BUDGETS.items()):
+        rec = records.get(name)
+        blind_us = (rec or {}).get("derived", {}).get("blind_us")
+        if rec is None or blind_us is None:
+            print(f"FAIL {name}: missing from {path} (or no blind_us "
+                  "baseline; benchmark renamed or skipped?)")
+            status = 1
+            continue
+        ratio = float(rec["us_per_call"]) / float(blind_us)
+        if ratio > max_ratio:
+            print(f"FAIL {name}: capacity-aware synthesis is {ratio:.2f}x "
+                  f"blind (> {max_ratio:.1f}x budget)")
+            status = 1
+        else:
+            print(f"ok   {name}: capacity-aware/blind = {ratio:.2f}x "
+                  f"<= {max_ratio:.1f}x")
     return status
 
 

@@ -18,15 +18,32 @@ executor against a first-class ``Topology``:
 "aware" synthesizes FLASH against the real fabric; "blind" executes the
 homogeneous-fabric FLASH plan on that same fabric (the
 ``execute_plan(topology=...)`` override).  Speedup = blind / aware.
+
+The ``hetero.synth.*`` rows compare capacity-aware *synthesis* (flash_ca:
+time-domain Birkhoff, per-pair slots) against capacity-blind synthesis
+(flash: byte-domain stages, capacity-proportional rail shares only), both
+executed link-level on the real fabric, under capacity-matched traffic --
+the serving regime where a load balancer keeps slow servers lightly
+loaded, and where blind equal-byte slots park fast pairs behind slow
+stragglers.  The ``synth.hetero{n}`` rows time capacity-aware vs blind
+synthesis on degraded-NIC fabrics and feed the CI guard
+(benchmarks/check_synth_budget.py): an aware slowdown > 2x over blind
+fails CI.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Topology, get_scheduler, random_workload, simulate
+from repro.core import (
+    Topology,
+    capacity_matched_workload,
+    get_scheduler,
+    random_workload,
+    simulate,
+)
 
-from .common import Csv, TESTBED
+from .common import Csv, TESTBED, time_us
 
 _N, _M = TESTBED["n_servers"], TESTBED["m_gpus"]
 _MEAN = 16 << 20
@@ -56,6 +73,38 @@ def _aware_vs_blind(csv: Csv, name: str, topo: Topology) -> None:
              f"|opt_frac={aware.algbw / opt.algbw:.3f}")
 
 
+def _synth_aware_vs_blind(csv: Csv, name: str, topo: Topology) -> None:
+    """Capacity-aware synthesis (flash_ca) vs capacity-blind synthesis
+    (flash), both executed link-level on the real fabric."""
+    w = capacity_matched_workload(topo, _MEAN, seed=0)
+    aware = simulate(w, "flash_ca")
+    blind = simulate(w, "flash")
+    opt = simulate(w, "optimal")
+    csv.emit(f"hetero.synth.{name}", aware.completion_time * 1e6,
+             f"blind_us={blind.completion_time * 1e6:.3f}"
+             f"|speedup={blind.completion_time / aware.completion_time:.3f}"
+             f"|opt_frac={aware.algbw / opt.algbw:.3f}")
+
+
+def _synth_time_series(csv: Csv) -> None:
+    """``synth.hetero{n}``: capacity-aware vs blind synthesis wall time and
+    plan quality on degraded-NIC fabrics (CI ratio guard input)."""
+    for n in (16, 32):
+        topo = Topology.homogeneous(
+            n, _M, b_intra=TESTBED["b_intra"], b_inter=TESTBED["b_inter"],
+            alpha=TESTBED["alpha"]).degrade_server(n // 2, 0.25)
+        w = capacity_matched_workload(topo, 4 << 20, seed=1)
+        aware_s, blind_s = get_scheduler("flash_ca"), get_scheduler("flash")
+        aware_us = time_us(lambda: aware_s.synthesize(w), repeats=3)
+        blind_us = time_us(lambda: blind_s.synthesize(w), repeats=3)
+        quality = (simulate(w, "flash").completion_time
+                   / simulate(w, "flash_ca").completion_time)
+        csv.emit(f"synth.hetero{n}", aware_us,
+                 f"blind_us={blind_us:.1f}"
+                 f"|synth_ratio={aware_us / blind_us:.2f}"
+                 f"|plan_speedup={quality:.3f}")
+
+
 def run(csv: Csv):
     homo = _homo()
     for factor in (0.5, 0.25, 0.1):
@@ -81,6 +130,15 @@ def run(csv: Csv):
         opt = simulate(w, "optimal")
         csv.emit(f"hetero.oversub_{factor:g}", flash.completion_time * 1e6,
                  f"opt_frac={flash.algbw / opt.algbw:.3f}")
+    # Capacity-aware synthesis vs blind synthesis (both link-level on the
+    # real fabric): a server with every NIC degraded, and mixed
+    # 400G/100G server generations, under capacity-matched traffic.
+    _synth_aware_vs_blind(csv, "degraded_nic_server_0.25",
+                          homo.degrade_server(2, 0.25))
+    _synth_aware_vs_blind(
+        csv, "mixed_servers_400g_100g",
+        homo.with_server_nic_speeds([12.5e9, 12.5e9, 50e9, 50e9]))
+    _synth_time_series(csv)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ dynamic-MoE traffic fingerprint repeats across iterations.  The Theorem 1-3
 analytic bounds live in bounds.py.
 """
 
-from .birkhoff import Stage, birkhoff_decompose, max_line_sum
+from .birkhoff import Stage, birkhoff_decompose, max_line_sum, stage_duration
 from .bounds import gap_bound, t_flash_worst_case, t_optimal
 from .plan import (
     BarrierStage,
@@ -23,6 +23,7 @@ from .plan import (
     RailStage,
     RedistributePhase,
     cluster_family_key,
+    plan_family_key,
     traffic_fingerprint,
 )
 from .schedulers import (
@@ -41,6 +42,7 @@ from .traffic import (
     ClusterSpec,
     Workload,
     balanced_workload,
+    capacity_matched_workload,
     moe_workload,
     random_workload,
     server_reduce,
@@ -51,12 +53,14 @@ __all__ = [
     "Stage",
     "birkhoff_decompose",
     "max_line_sum",
+    "stage_duration",
     "gap_bound",
     "t_flash_worst_case",
     "t_optimal",
     "Plan",
     "PlanCache",
     "cluster_family_key",
+    "plan_family_key",
     "PlanValidationError",
     "traffic_fingerprint",
     "LoadBalancePhase",
@@ -84,6 +88,7 @@ __all__ = [
     "ClusterSpec",
     "Workload",
     "balanced_workload",
+    "capacity_matched_workload",
     "moe_workload",
     "random_workload",
     "server_reduce",

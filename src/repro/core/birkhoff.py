@@ -45,6 +45,24 @@ scale, so default callers keep seed-identical plans -- and "repair" beyond,
 where synthesis speed is the binding constraint (ROADMAP north star) and no
 stage list is pinned.
 
+Capacity-aware synthesis (``capacity_aware=True`` with a ``topology=``): on
+a heterogeneous fabric the equal-byte-slot stage is no longer
+straggler-free -- a slow server pair stretches every stage it rides while
+fast pairs idle out their slots.  The aware mode therefore decomposes the
+*time* matrix ``tau = T / pair_capacity`` (DESIGN.md section 1d): a stage of
+time-weight ``w`` gives pair (i, j) a byte slot of ``w *
+pair_capacity(i, j)``, so every pair in the stage drains in the same
+``w``-second window (equal-*time* slots, the heterogeneous generalization
+of straggler freedom), and both matching engines prefer high-capacity
+edges (per-row adjacency ordered by descending ``min``-endpoint capacity;
+the exact engine's first-fit tie-breaks and the repair engine's
+augmenting-path searches follow that order).  Stages sort ascending by
+*duration*, which is what the Theorem 2 pipelining argument needs --
+low-capacity pairs automatically ride the small byte slots.  The
+capacity-blind path is bit-identical to before: ``capacity_aware=False``
+never looks at the topology, and a uniform-capacity fabric degenerates to
+the blind decomposition exactly.
+
 Why "exact" can be incremental: Hopcroft-Karp's first BFS/DFS phase on an
 empty matching is exactly a first-fit greedy (row u takes the smallest free
 column of its adjacency; no augmentation happens because every ``dist`` is
@@ -74,6 +92,8 @@ __all__ = [
     "hopcroft_karp",
     "birkhoff_decompose",
     "max_line_sum",
+    "live_slots",
+    "stage_duration",
     "AUTO_EXACT_MAX_N",
 ]
 
@@ -96,17 +116,28 @@ class Stage:
     *real* data each slot carries.  ``sent[i]`` is the genuine byte count
     transferred by server i (<= size; the remainder of the slot is padding,
     i.e. link idle time inside the stage).
+
+    ``slots`` is None for capacity-blind stages (every sender's slot is the
+    uniform ``size`` bytes).  Capacity-aware stages carry per-sender slot
+    sizes instead: slot i is ``w * pair_capacity(i, perm[i])`` bytes for
+    the stage's time-weight ``w``, so all pairs drain in the same window;
+    ``size`` is then the largest slot (``sent[i] <= slots[i] <= size``).
     """
 
     perm: tuple
     size: float
     sent: tuple
+    slots: Optional[tuple] = None
 
     def __post_init__(self):
         if len(self.perm) != len(self.sent):
             raise ValueError(
                 f"perm has {len(self.perm)} slots but sent has "
                 f"{len(self.sent)} entries; one genuine-byte count per slot")
+        if self.slots is not None and len(self.slots) != len(self.perm):
+            raise ValueError(
+                f"perm has {len(self.perm)} slots but slots has "
+                f"{len(self.slots)} entries; one slot size per sender")
 
     @property
     def active(self) -> int:
@@ -245,11 +276,21 @@ class _CanonicalGreedy:
     column is re-offered to the smallest row that prefers it, and taking a
     column pushes any smaller claimant so it can steal back.  Cascades are
     short in practice: each steal strictly shrinks the thief's pick.
+
+    ``rank`` generalizes "smallest column" to an arbitrary per-row
+    preference order (capacity-aware synthesis: ``row_adj`` comes sorted by
+    descending pair capacity and ``rank[i, j]`` is column j's position in
+    row i's order).  ``rank=None`` keeps the original ascending-index
+    comparisons bit-for-bit -- the blind path never allocates or consults a
+    rank matrix.  Row order (whose first-fit turn comes first) stays the
+    ascending row index in both modes, so ``col_adj`` stays row-sorted.
     """
 
-    def __init__(self, row_adj: List[List[int]], col_adj: List[List[int]]):
+    def __init__(self, row_adj: List[List[int]], col_adj: List[List[int]],
+                 rank: Optional[np.ndarray] = None):
         self.row_adj = row_adj  # shared with the stage loop, pruned there
         self.col_adj = col_adj
+        self.rank = rank
         n = len(row_adj)
         self.pick = [-1] * n
         self.inv = [-1] * n
@@ -285,6 +326,12 @@ class _CanonicalGreedy:
                 heapq.heappush(heap, i)
                 freed.append(j)
         self._drain(heap, freed)
+
+    def _prefers(self, y: int, a: int, b: int) -> bool:
+        """Does row y rank column a strictly before column b (b != -1)?"""
+        if self.rank is None:
+            return a < b
+        return self.rank[y, a] < self.rank[y, b]
 
     def _drain(self, heap: List[int], freed: List[int]) -> None:
         row_adj, col_adj = self.row_adj, self.col_adj
@@ -325,7 +372,7 @@ class _CanonicalGreedy:
                     if y >= x:
                         break
                     p = pick[y]
-                    if p == -1 or p > new:
+                    if p == -1 or self._prefers(y, new, p):
                         heapq.heappush(heap, y)
                         break
                 continue
@@ -335,7 +382,7 @@ class _CanonicalGreedy:
             # Smallest row that would have taken j at its first-fit turn.
             for y in self.col_adj[j]:
                 p = pick[y]
-                if p == -1 or p > j:
+                if p == -1 or self._prefers(y, j, p):
                     heapq.heappush(heap, y)
                     # Re-offer until someone takes it: y's re-pick may
                     # settle on a smaller column, which removes y from j's
@@ -407,6 +454,8 @@ def birkhoff_decompose(
     coalesce: bool = True,
     reference: bool = False,
     policy: str = "auto",
+    topology=None,
+    capacity_aware: bool = False,
 ) -> List[Stage]:
     """Decompose a nonnegative square traffic matrix into Birkhoff stages.
 
@@ -417,6 +466,8 @@ def birkhoff_decompose(
       sort_ascending: execute stages in ascending size order so each stage's
         intra-server redistribute (over B1) hides under the *next* stage's
         inter-server transfer (over B2); see the Theorem 2 pipelining argument.
+        Capacity-aware stages sort by *duration* instead of byte size --
+        the quantity the pipelining argument actually needs.
       coalesce: merge consecutive stages that share an identical permutation
         support (reduces stage count, whose minimization is NP-hard [20] --
         this is the cheap 80 percent).
@@ -429,6 +480,15 @@ def birkhoff_decompose(
         patched by augmenting paths; fastest, equally valid but different
         stage lists), or "auto" (exact up to AUTO_EXACT_MAX_N servers,
         repair beyond -- see module docstring).
+      topology: the fabric whose ``pair_capacity()`` weights the
+        capacity-aware decomposition.  Required (and only consulted) when
+        ``capacity_aware=True``.
+      capacity_aware: decompose the time matrix ``t / pair_capacity``
+        instead of the byte matrix, emitting per-sender byte ``slots``
+        proportional to pair capacity so every pair of a stage drains in
+        the same window, with both matching engines preferring
+        high-capacity edges (module docstring).  On a uniform-capacity
+        fabric this degenerates to the blind decomposition exactly.
 
     Returns:
       List of Stage.  sum_k stage_k.as_matrix upper-bounds T elementwise and
@@ -441,6 +501,21 @@ def birkhoff_decompose(
         return []
     if np.abs(np.diag(t)).max(initial=0.0) > 0:
         raise ValueError("diagonal (intra-server) traffic must be zero")
+
+    if capacity_aware:
+        if reference:
+            raise ValueError(
+                "the reference oracle is capacity-blind; drop reference=True "
+                "or capacity_aware=True")
+        caps = _pair_caps(topology, n)
+        offdiag = caps[~np.eye(n, dtype=bool)]  # empty for n == 1: uniform
+        if offdiag.size and not np.all(offdiag == offdiag.flat[0]):
+            return _capacity_aware_stages(t, caps, n, sort_ascending,
+                                          coalesce, policy)
+        # Uniform pair capacity: time and byte domains coincide up to one
+        # global scale, so fall through to the blind path (bit-identical
+        # stages, no redundant slots carried).
+
     total = max_line_sum(t)
     if total <= 0:
         return []
@@ -452,12 +527,8 @@ def birkhoff_decompose(
     if reference:
         stages = _reference_stages(work, real, n, eps)
     else:
-        if policy == "auto":
-            policy = "exact" if n <= AUTO_EXACT_MAX_N else "repair"
-        if policy not in ("exact", "repair"):
-            raise ValueError(
-                f"unknown policy {policy!r}; pick from auto/exact/repair")
-        stages = _incremental_stages(work, real, n, eps, policy)
+        stages = _incremental_stages(work, real, n, eps,
+                                     _resolve_policy(policy, n))
 
     if coalesce:
         stages = _coalesce(stages)
@@ -466,18 +537,135 @@ def birkhoff_decompose(
     return stages
 
 
+def _resolve_policy(policy: str, n: int) -> str:
+    if policy == "auto":
+        policy = "exact" if n <= AUTO_EXACT_MAX_N else "repair"
+    if policy not in ("exact", "repair"):
+        raise ValueError(
+            f"unknown policy {policy!r}; pick from auto/exact/repair")
+    return policy
+
+
+def _pair_caps(topology, n: int) -> np.ndarray:
+    if topology is None:
+        raise ValueError("capacity_aware=True requires topology=")
+    if topology.n_servers != n:
+        raise ValueError(
+            f"topology has {topology.n_servers} servers but the traffic "
+            f"matrix is {n}x{n}")
+    return topology.pair_capacity()
+
+
+def _capacity_aware_stages(t: np.ndarray, caps: np.ndarray, n: int,
+                           sort_ascending: bool, coalesce: bool,
+                           policy: str) -> List[Stage]:
+    """Time-domain decomposition: stages of tau = t / pair_capacity, matched
+    with high-capacity-first preference, converted back to byte slots."""
+    # A fully disconnected pair can never drain -- keep it schedulable (the
+    # executor charges infinity) by converting at the slowest live capacity.
+    off = ~np.eye(n, dtype=bool)
+    pos = caps[off & (caps > 0)]
+    fallback = float(pos.min()) if pos.size else 1.0
+    caps_eff = np.where(caps > 0, caps, fallback)
+    np.fill_diagonal(caps_eff, 1.0)  # unused: t's diagonal is zero
+
+    tau = t / caps_eff
+    total = max_line_sum(tau)
+    if total <= 0:
+        return []
+    eps = total * _EPS_REL
+    work = tau + pad_to_doubly_balanced(tau)
+
+    # Per-row preference: descending pair capacity, ascending index on ties
+    # (stable argsort), so uniform-capacity rows keep first-fit order.
+    order = np.argsort(-caps_eff, axis=1, kind="stable")
+    rank = np.empty((n, n), dtype=np.int64)
+    np.put_along_axis(rank, order, np.broadcast_to(np.arange(n), (n, n)),
+                      axis=1)
+
+    stages = _incremental_stages(work, tau, n, eps,
+                                 _resolve_policy(policy, n), pref_rank=rank)
+    if coalesce:
+        stages = _coalesce(stages)
+    if sort_ascending:
+        stages.sort(key=lambda s: s.size)  # time units: ascending durations
+    out = []
+    for s in stages:
+        byte_stage = _stage_to_bytes(s, caps_eff, n)
+        if byte_stage is not None:  # padding-only stages carry nothing
+            out.append(byte_stage)
+    return out
+
+
+def live_slots(perm, slots, size: float):
+    """Shared slot-extraction idiom: ``(src, dst, slot)`` for a stage's
+    live senders -- their row indices, destinations, and per-sender slot
+    bytes (the uniform ``size`` when ``slots`` is None).  Used by the
+    executor, the validator and the duration helpers so slot semantics
+    live in one place."""
+    perm = np.asarray(perm, dtype=np.int64)
+    src = np.flatnonzero(perm >= 0)
+    dst = perm[src]
+    slot = (np.asarray(slots, dtype=np.float64)[src] if slots is not None
+            else np.full(src.size, float(size)))
+    return src, dst, slot
+
+
+def _stage_to_bytes(s: Stage, caps: np.ndarray, n: int) -> Optional[Stage]:
+    """Convert one time-domain stage (weight w seconds) into byte slots:
+    pair (i, j) gets a ``w * caps[i, j]``-byte slot, so every pair drains
+    in the same w-second window."""
+    perm = np.asarray(s.perm, dtype=np.int64)
+    rows = np.flatnonzero(perm >= 0)
+    if rows.size == 0:
+        return None
+    c = caps[rows, perm[rows]]
+    slots = np.zeros(n)
+    slots[rows] = s.size * c
+    sent = np.zeros(n)
+    sent[rows] = np.asarray(s.sent, dtype=np.float64)[rows] * c
+    return Stage(perm=s.perm, size=float(slots.max(initial=0.0)),
+                 sent=tuple(sent.tolist()), slots=tuple(slots.tolist()))
+
+
+def stage_duration(stage: Stage, caps: np.ndarray) -> float:
+    """Seconds a stage occupies on the fabric whose pair capacities are
+    ``caps``: the slowest live pair's slot over its capacity.  Uniform
+    ``size``-byte slots when the stage carries no per-sender slots."""
+    src, dst, slot = live_slots(stage.perm, stage.slots, stage.size)
+    if src.size == 0:
+        return 0.0
+    c = caps[src, dst]
+    out = np.full(src.size, np.inf)
+    np.divide(slot, c, out=out, where=c > 0)
+    out[(c <= 0) & (slot <= 0)] = 0.0
+    return float(out.max(initial=0.0))
+
+
 def _incremental_stages(work: np.ndarray, real: np.ndarray, n: int,
-                        eps: float, policy: str) -> List[Stage]:
+                        eps: float, policy: str,
+                        pref_rank: Optional[np.ndarray] = None) -> List[Stage]:
     """Shared vectorized stage loop for the exact and repair engines.
 
     Per stage, the float math is pure NumPy fancy indexing; the support's
     adjacency lists shrink incrementally (only matched entries can hit
     zero); the two policies differ solely in how the next perfect matching
-    is obtained from the previous one.
+    is obtained from the previous one.  ``pref_rank`` (capacity-aware
+    synthesis) orders each row's adjacency by the given per-row preference
+    instead of ascending column index, which steers both engines' matching
+    choices toward high-capacity edges; None keeps the original order
+    bit-for-bit.
     """
     mask = work > eps
-    row_adj: List[List[int]] = [np.flatnonzero(mask[i]).tolist()
-                                for i in range(n)]
+    if pref_rank is None:
+        row_adj: List[List[int]] = [np.flatnonzero(mask[i]).tolist()
+                                    for i in range(n)]
+    else:
+        row_adj = []
+        for i in range(n):
+            cols = np.flatnonzero(mask[i])
+            row_adj.append(
+                cols[np.argsort(pref_rank[i, cols], kind="stable")].tolist())
     col_adj: List[List[int]] = [np.flatnonzero(mask[:, j]).tolist()
                                 for j in range(n)]
     nnz = int(mask.sum())
@@ -488,7 +676,7 @@ def _incremental_stages(work: np.ndarray, real: np.ndarray, n: int,
     match_r: List[int] = []
     n_free = 0  # unmatched rows of the maintained matching (repair engine)
     if exact:
-        greedy = _CanonicalGreedy(row_adj, col_adj)
+        greedy = _CanonicalGreedy(row_adj, col_adj, rank=pref_rank)
     else:
         # Repair engine: one full matching up front, patched ever after.
         match_l = [-1] * n

@@ -55,6 +55,7 @@ __all__ = [
     "PlanCache",
     "traffic_fingerprint",
     "cluster_family_key",
+    "plan_family_key",
     "LoadBalancePhase",
     "PermutationStage",
     "BarrierStage",
@@ -139,12 +140,21 @@ class LoadBalancePhase(PhaseBase):
 class PermutationStage(PhaseBase):
     """One incast-free, straggler-free inter-server stage: server i sends a
     ``size``-byte slot to server ``perm[i]`` (-1 = idle padding slot);
-    ``sent[i]`` is the genuine payload inside the slot."""
+    ``sent[i]`` is the genuine payload inside the slot.
+
+    ``slots`` is None for capacity-blind stages (uniform ``size``-byte
+    slots).  Capacity-aware synthesis sizes each sender's slot to its pair
+    capacity (``slots[i] = window * pair_capacity(i, perm[i])``) so every
+    pair drains in the same time window -- equal-*time* slots, the
+    heterogeneous-fabric generalization of straggler freedom; ``size`` is
+    then the largest slot.
+    """
 
     kind: ClassVar[str] = "permutation"
     perm: Tuple[int, ...]
     size: float
     sent: Tuple[float, ...]
+    slots: Optional[Tuple[float, ...]] = None
 
     def payload(self, cluster):
         return float(sum(self.sent)), 0.0
@@ -154,14 +164,20 @@ class PermutationStage(PhaseBase):
         return float(sum(self.sent))
 
     def to_dict(self):
-        return {"kind": self.kind, "perm": list(self.perm),
-                "size": float(self.size), "sent": list(self.sent)}
+        d = {"kind": self.kind, "perm": list(self.perm),
+             "size": float(self.size), "sent": list(self.sent)}
+        if self.slots is not None:
+            d["slots"] = list(self.slots)
+        return d
 
     @classmethod
     def from_dict(cls, d):
+        slots = d.get("slots")
         return cls(perm=tuple(int(j) for j in d["perm"]),
                    size=float(d["size"]),
-                   sent=tuple(float(x) for x in d["sent"]))
+                   sent=tuple(float(x) for x in d["sent"]),
+                   slots=None if slots is None
+                   else tuple(float(x) for x in slots))
 
 
 @register_phase
@@ -343,6 +359,11 @@ class Plan:
         of each (src, dst) server pair's slot bytes, fixed at synthesis
         time (FLASH's capacity-proportional rebalance target; rail g of a
         pair is capped by the slower endpoint NIC).  None = uniform 1/m.
+      capacity_aware: provenance flag -- the permutation stages were
+        synthesized against the topology's pair capacities (per-sender
+        ``slots`` sized to drain in a common window).  ``validate()`` then
+        additionally checks slot-vs-rail feasibility: no rail of any live
+        pair may need longer than the stage's window to drain its share.
     """
 
     algorithm: str
@@ -354,11 +375,22 @@ class Plan:
     fingerprint: Optional[str] = None
     topology: Optional[Topology] = None
     nic_shares: Optional[np.ndarray] = None
+    capacity_aware: bool = False
 
     @property
     def topo(self) -> Topology:
-        """The fabric the plan was synthesized for (derived when None)."""
-        return self.topology or Topology.from_cluster(self.cluster)
+        """The fabric the plan was synthesized for (derived when None).
+
+        Memoized like ``Workload.topo``: validation, execution and cache
+        keying all consult it, and the derived instance carries the
+        memoized ``fingerprint()``."""
+        if self.topology is not None:
+            return self.topology
+        derived = self.__dict__.get("_derived_topo")
+        if derived is None:
+            derived = Topology.from_cluster(self.cluster)
+            object.__setattr__(self, "_derived_topo", derived)
+        return derived
 
     @property
     def stages(self) -> Tuple[PhaseBase, ...]:
@@ -394,6 +426,7 @@ class Plan:
             else self.topology.to_dict(),
             "nic_shares": None if self.nic_shares is None
             else _listify(self.nic_shares),
+            "capacity_aware": bool(self.capacity_aware),
         }
 
     @classmethod
@@ -418,6 +451,7 @@ class Plan:
             topology=Topology.from_dict(d.get("topology")),
             nic_shares=None if d.get("nic_shares") is None
             else _np2d(d["nic_shares"]),
+            capacity_aware=bool(d.get("capacity_aware", False)),
         )
 
     # -- validation -----------------------------------------------------
@@ -452,6 +486,22 @@ class Plan:
                                      for s in p.sent):
                     raise PlanValidationError(
                         "permutation stage payload exceeds slot size")
+                if p.slots is not None:
+                    if len(p.slots) != len(p.perm):
+                        raise PlanValidationError(
+                            f"permutation stage has {len(p.perm)} senders "
+                            f"but {len(p.slots)} slot sizes")
+                    if any(sl < 0 or sl > p.size * (1 + rtol)
+                           for sl in p.slots):
+                        raise PlanValidationError(
+                            "per-sender slot exceeds the stage size")
+                    if any(s > sl * (1 + rtol)
+                           for s, sl in zip(p.sent, p.slots)):
+                        raise PlanValidationError(
+                            "permutation stage payload exceeds its "
+                            "per-sender slot")
+        if self.capacity_aware:
+            self._check_slot_rail_feasibility(rtol)
 
         t_server, s_intra = server_reduce(w.matrix, self.cluster.m_gpus)
         inter_expected = float(t_server.sum())
@@ -474,8 +524,58 @@ class Plan:
                 f"intra-server bytes not conserved: plan carries "
                 f"{intra_carried:.6g}, workload has {intra_expected:.6g}")
 
+    def _check_slot_rail_feasibility(self, rtol: float) -> None:
+        """Capacity-aware invariant: within each permutation stage, no rail
+        of any live pair needs longer than the stage's window (the slowest
+        pair's slot over its pair capacity) to drain its share of the slot.
+        Capacity-proportional slots + shares satisfy this with equality;
+        uniform shares grafted onto heterogeneous slots (or slots from a
+        different fabric than ``topology``) fail it loudly.
+
+        Pairs with zero pair capacity are excluded from both the window and
+        the rail check: a fully-failed pair makes the stage take forever
+        regardless of shares (the executor reports infinity), and letting
+        its infinite window vouch for the *healthy* pairs would make the
+        check vacuous exactly when the fabric is most degraded.
+        """
+        from .birkhoff import live_slots
+        from .topology import bw_div
+
+        topo = self.topo
+        caps = topo.pair_capacity()
+        m = topo.m_gpus
+        shares = (self.nic_shares if self.nic_shares is not None
+                  else np.full((topo.n_servers, topo.n_servers, m), 1.0 / m))
+        for k, p in enumerate(self.phases):
+            if not isinstance(p, PermutationStage):
+                continue
+            src, dst, slot = live_slots(p.perm, p.slots, p.size)
+            finite = caps[src, dst] > 0
+            src, dst, slot = src[finite], dst[finite], slot[finite]
+            if src.size == 0:
+                continue
+            window = float(bw_div(slot, caps[src, dst]).max(initial=0.0))
+            rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[dst])
+            rail_t = bw_div(slot[:, None] * shares[src, dst], rail_caps)
+            worst = float(rail_t.max(initial=0.0))
+            if worst > window * (1 + rtol):
+                raise PlanValidationError(
+                    f"stage {k} is slot-vs-rail infeasible: a rail needs "
+                    f"{worst:.6g}s to drain its share but the stage window "
+                    f"is {window:.6g}s (shares inconsistent with the "
+                    "fabric's pair capacities?)")
+
 
 # -- synthesis caching ----------------------------------------------------
+
+def _family_key(cluster: ClusterSpec, topo_fingerprint: str,
+                algorithm: str) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(repr(dataclasses.astuple(cluster)).encode())
+    h.update(topo_fingerprint.encode())
+    h.update(algorithm.encode())
+    return h.hexdigest()
+
 
 def cluster_family_key(w: Workload, algorithm: str = "") -> str:
     """Fingerprint of (cluster, topology, algorithm) *without* the traffic
@@ -489,11 +589,17 @@ def cluster_family_key(w: Workload, algorithm: str = "") -> str:
     because repair requires the previous plan's cluster to match exactly
     (e.g. two specs can share a fabric but differ in alpha).
     """
-    h = hashlib.blake2b(digest_size=16)
-    h.update(repr(dataclasses.astuple(w.cluster)).encode())
-    h.update(w.topo.fingerprint().encode())
-    h.update(algorithm.encode())
-    return h.hexdigest()
+    return _family_key(w.cluster, w.topo.fingerprint(), algorithm)
+
+
+def plan_family_key(plan: Plan) -> str:
+    """The family key a synthesized Plan belongs to.
+
+    Agrees with ``cluster_family_key(w, plan.algorithm)`` for the workload
+    the plan was synthesized from, which lets ``PlanCache.insert`` maintain
+    the family index from the plan alone (and prune it on eviction).
+    """
+    return _family_key(plan.cluster, plan.topo.fingerprint(), plan.algorithm)
 
 
 def traffic_fingerprint(w: Workload, algorithm: str = "") -> str:
@@ -544,6 +650,8 @@ class PlanCache:
         self.warm_start = warm_start
         self._store: "OrderedDict[str, Plan]" = OrderedDict()
         self._family: Dict[str, str] = {}  # family key -> latest exact key
+        self._key_family: Dict[str, str] = {}  # exact key -> its family
+        self._family_count: Dict[str, int] = {}  # family -> live cached keys
         self.hits = 0
         self.misses = 0
         self.warm_hits = 0
@@ -559,6 +667,8 @@ class PlanCache:
     def clear(self) -> None:
         self._store.clear()
         self._family.clear()
+        self._key_family.clear()
+        self._family_count.clear()
         self.hits = 0
         self.misses = 0
         self.warm_hits = 0
@@ -573,10 +683,46 @@ class PlanCache:
         return plan
 
     def insert(self, key: str, plan: Plan) -> None:
+        family = plan_family_key(plan)
+        old_family = self._key_family.get(key)
+        if old_family is not None and old_family != family:
+            # Overwrite with a different-family plan (hand-inserted key).
+            del self._key_family[key]
+            self._drop_family_member(key, old_family)
         self._store[key] = plan
         self._store.move_to_end(key)
+        if key not in self._key_family:
+            self._key_family[key] = family
+            self._family_count[family] = \
+                self._family_count.get(family, 0) + 1
+        self._family[family] = key
         while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
+            evicted, _ = self._store.popitem(last=False)
+            self._drop_family_member(evicted, self._key_family.pop(evicted))
+
+    def _drop_family_member(self, key: str, family: str) -> None:
+        """Keep the family index in lockstep with the LRU store: without
+        this, long-running serving grows ``_family`` without bound and a
+        stale family -> evicted-key pointer silently turns every warm start
+        cold.  The membership count makes the common case -- one cached
+        plan per fabric, family dies with its key -- O(1); only a family
+        with surviving members pays a scan to repoint at the most recently
+        used survivor."""
+        remaining = self._family_count[family] - 1
+        if remaining:
+            self._family_count[family] = remaining
+        else:
+            del self._family_count[family]
+        if self._family.get(family) != key:
+            return
+        if not remaining:
+            del self._family[family]
+            return
+        for other in reversed(self._store):
+            if self._key_family.get(other) == family:
+                self._family[family] = other
+                return
+        del self._family[family]  # unreachable while counts are coherent
 
     def get_or_synthesize(self, scheduler, w: Workload) -> Plan:
         """Return the cached Plan for (w, scheduler) or synthesize + cache.
@@ -606,6 +752,5 @@ class PlanCache:
                 plan = None
             if plan is None:
                 plan = scheduler.synthesize(w, fingerprint=key)
-            self.insert(key, plan)
-            self._family[family] = key
+            self.insert(key, plan)  # also repoints _family[family] to key
         return plan

@@ -34,7 +34,12 @@ from typing import ClassVar, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
-from .birkhoff import Stage, birkhoff_decompose, max_line_sum
+from .birkhoff import (
+    Stage,
+    birkhoff_decompose,
+    max_line_sum,
+    stage_duration,
+)
 from .plan import (
     BarrierStage,
     BoundStage,
@@ -56,6 +61,7 @@ __all__ = [
     "available_schedulers",
     "SCHEDULERS",
     "FlashScheduler",
+    "CapacityAwareFlashScheduler",
     "FanOutScheduler",
     "SpreadOutScheduler",
     "HierarchicalScheduler",
@@ -139,6 +145,7 @@ class Scheduler(abc.ABC):
             fingerprint=fingerprint,
             topology=w.topology,
             nic_shares=nic_shares,
+            capacity_aware=getattr(self, "capacity_aware", False),
         )
 
 
@@ -155,11 +162,18 @@ class FlashScheduler(Scheduler):
 
     name = "flash"
     accounts_intra = True
+    # Synthesize the Birkhoff stages against the fabric's pair capacities
+    # (time-domain decomposition, per-sender slots).  Off here: "flash"
+    # stays bit-identical to the capacity-blind engine; the "flash_ca"
+    # registration below is the opt-in.
+    capacity_aware: ClassVar[bool] = False
 
     def plan_phases(self, w: Workload):
         t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
-        stages = birkhoff_decompose(t_server, sort_ascending=True,
-                                    coalesce=True)
+        stages = birkhoff_decompose(
+            t_server, sort_ascending=True, coalesce=True,
+            topology=w.topo if self.capacity_aware else None,
+            capacity_aware=self.capacity_aware)
         return self._phases_from_stages(w, t_server, s_intra, stages)
 
     def _phases_from_stages(self, w: Workload, t_server: np.ndarray,
@@ -184,7 +198,8 @@ class FlashScheduler(Scheduler):
         lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
 
         phases = [LoadBalancePhase(moved_per_gpu=lb_moved, charge_alpha=True)]
-        phases += [PermutationStage(perm=s.perm, size=s.size, sent=s.sent)
+        phases += [PermutationStage(perm=s.perm, size=s.size, sent=s.sent,
+                                    slots=s.slots)
                    for s in stages]
         if stages:
             phases.append(RedistributePhase(
@@ -243,7 +258,9 @@ class FlashScheduler(Scheduler):
             perm = np.asarray(p.perm, dtype=np.int64)
             li = np.flatnonzero(perm >= 0)
             lj = perm[li]
-            take = np.minimum(remaining[li, lj], p.size)
+            cap_slot = (np.asarray(p.slots, dtype=np.float64)[li]
+                        if p.slots is not None else p.size)
+            take = np.minimum(remaining[li, lj], cap_slot)
             remaining[li, lj] -= take
             # The slot only needs to fit the largest refilled payload:
             # shrinking it sheds the padding a traffic *decrease* left
@@ -253,15 +270,34 @@ class FlashScheduler(Scheduler):
                 continue
             sent = np.zeros(n)
             sent[li] = take
+            slots = None
+            if self.capacity_aware:
+                # Re-weight on repair: every pair's slot shrinks to its
+                # refilled payload, so the stage window is set by the
+                # slowest refilled pair, not the old padding.
+                slot_arr = np.zeros(n)
+                slot_arr[li] = take
+                slots = tuple(slot_arr.tolist())
             reused.append(Stage(perm=p.perm, size=size,
-                                sent=tuple(sent.tolist())))
+                                sent=tuple(sent.tolist()), slots=slots))
         if float(remaining.sum()) > 0.25 * max(float(t_server.sum()), 1.0):
             # Too much traffic fell outside the old permutations: a
             # repaired plan would be far from the cold optimum.
             return None
-        residual = birkhoff_decompose(remaining, sort_ascending=True,
-                                      coalesce=True)
-        stages = sorted(reused + residual, key=lambda s: s.size)
+        if self.capacity_aware:
+            residual = birkhoff_decompose(remaining, sort_ascending=True,
+                                          coalesce=True, topology=w.topo,
+                                          capacity_aware=True)
+            # Ascending *durations* preserve the Theorem 2 pipeline on the
+            # heterogeneous fabric (byte sizes alone order it wrongly when
+            # pair capacities differ).
+            caps = w.topo.pair_capacity()
+            stages = sorted(reused + residual,
+                            key=lambda s: stage_duration(s, caps))
+        else:
+            residual = birkhoff_decompose(remaining, sort_ascending=True,
+                                          coalesce=True)
+            stages = sorted(reused + residual, key=lambda s: s.size)
         if len(stages) > 2 * (n * n - 2 * n + 2):
             # Chained repairs accumulate residual slivers; reset before the
             # stage count (and its per-stage wakeup cost) drifts.
@@ -279,6 +315,26 @@ class FlashScheduler(Scheduler):
         if plan is None:
             plan = self.synthesize(w, fingerprint=fingerprint)
         return plan
+
+
+@register_scheduler
+class CapacityAwareFlashScheduler(FlashScheduler):
+    """FLASH with capacity-aware Birkhoff synthesis (opt-in, ``flash_ca``).
+
+    Same three-phase plan shape as ``flash``, but the stage list comes from
+    the time-domain decomposition of ``T / pair_capacity`` with
+    high-capacity-first matchings (birkhoff.py module docstring): each
+    pair's byte slot is sized so every pair of a stage drains in the same
+    window, and stages sort by ascending duration.  On a uniform-capacity
+    fabric the decomposition degenerates to the blind one, so this
+    scheduler only diverges from ``flash`` where pair capacities differ
+    (degraded NICs, mixed NIC generations).  Registered under its own name
+    so plans, cache families and warm repairs never mix with the blind
+    engine's.
+    """
+
+    name = "flash_ca"
+    capacity_aware = True
 
 
 # -- FanOut ----------------------------------------------------------------

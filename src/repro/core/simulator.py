@@ -74,6 +74,7 @@ from .plan import (
     RailStage,
     RedistributePhase,
 )
+from .birkhoff import live_slots
 from .schedulers import SCHEDULERS, get_scheduler
 from .topology import Topology, bw_div as _div, bw_sdiv as _sdiv
 from .traffic import Workload
@@ -102,19 +103,52 @@ class SimResult:
 def _perm_stage_time(topo: Topology, ph: PermutationStage,
                      shares: np.ndarray) -> float:
     """One permutation stage, link-level (no alpha): each live sender i
-    ships a ``size``-byte slot to perm[i], split across its NICs by
-    ``shares``; rail g of the pair is capped by the slower endpoint NIC;
-    the stage also crosses the spine once."""
-    perm = np.asarray(ph.perm, dtype=np.int64)
-    src = np.nonzero(perm >= 0)[0]
+    ships its slot to perm[i] -- the uniform ``size`` bytes, or its
+    per-sender ``slots[i]`` when the stage is capacity-aware -- split
+    across its NICs by ``shares``; rail g of the pair is capped by the
+    slower endpoint NIC; the stage also crosses the spine once."""
+    src, dst, slot = live_slots(ph.perm, ph.slots, ph.size)
     if src.size == 0:
         return 0.0
-    dst = perm[src]
     rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[dst])  # (k, m)
-    flows = ph.size * shares[src, dst]                          # (k, m)
+    flows = slot[:, None] * shares[src, dst]                    # (k, m)
+    spine_bytes = (ph.size * len(src) if ph.slots is None  # exact blind form
+                   else float(slot.sum()))
     t = float(_div(flows, rail_caps).max(initial=0.0))
-    spine = _sdiv(ph.size * len(src), topo.spine_bandwidth)
+    spine = _sdiv(spine_bytes, topo.spine_bandwidth)
     return max(t, spine)
+
+
+def _stage_redistribute_time(topo: Topology, ph: PermutationStage,
+                             worst_a2a: float) -> float:
+    """Hidden redistribute of one stage: each *receiver* spreads its slot
+    over its own server fabric, so the stage is charged at the worst fabric
+    it actually touches -- not the cluster-wide slowest (that model
+    overcharges every fast server on mixed fabrics).  Padding-only stages
+    keep the legacy cluster-min charge (they touch no server)."""
+    m = topo.m_gpus
+    src, dst, slot = live_slots(ph.perm, ph.slots, ph.size)
+    if src.size == 0:
+        return _sdiv(ph.size / m, worst_a2a)
+    return float(_div(slot / m, topo.intra_a2a_bw[dst]).max(initial=0.0))
+
+
+def _tail_redistribute_time(topo: Topology, bytes_per_gpu: float,
+                            last_stage: Optional[PermutationStage]) -> float:
+    """Tail RedistributePhase: the *last* permutation stage's redistribute.
+    Receiver j spreads its share of the tail bytes -- scaled by its slot's
+    fraction of the stage (slot_j / size; 1 for uniform slots) -- over its
+    own fabric, like the hidden redistributes.  Plans without permutation
+    stages (hierarchical scatter) keep the conservative cluster-min charge.
+    """
+    if last_stage is not None and last_stage.size > 0:
+        src, dst, slot = live_slots(last_stage.perm, last_stage.slots,
+                                    last_stage.size)
+        if src.size:
+            per_recv = bytes_per_gpu * (slot / float(last_stage.size))
+            return float(_div(per_recv,
+                              topo.intra_a2a_bw[dst]).max(initial=0.0))
+    return _sdiv(bytes_per_gpu, float(topo.intra_a2a_bw.min()))
 
 
 def _permutation_times(topo: Topology, stages: List[PermutationStage],
@@ -124,10 +158,9 @@ def _permutation_times(topo: Topology, stages: List[PermutationStage],
     inter: sum over stages of alpha + link-level stage time.
     hidden_residual: stage k's redistribute must fit under stage k+1's
       transfer because l_k <= l_{k+1} and B1 > B2 (Theorem 2 pipelining
-      argument); any excess is charged.  The redistribute rides the
-      slowest server fabric.
+      argument); any excess is charged.  The redistribute rides the worst
+      fabric among the stage's receivers.
     """
-    m = topo.m_gpus
     worst_a2a = float(topo.intra_a2a_bw.min())
     times = [_perm_stage_time(topo, ph, shares) for ph in stages]
     inter = 0.0
@@ -135,7 +168,7 @@ def _permutation_times(topo: Topology, stages: List[PermutationStage],
     for k, ph in enumerate(stages):
         inter += topo.alpha + times[k]
         if k + 1 < len(stages):
-            redis = _sdiv(ph.size / m, worst_a2a)
+            redis = _stage_redistribute_time(topo, ph, worst_a2a)
             hidden_residual += max(0.0, redis - times[k + 1])
     return {"inter": inter, "hidden_residual": hidden_residual}
 
@@ -268,7 +301,9 @@ def execute_plan(plan: Plan, w: Workload, *,
             add("inter", t)
             n_stages += 1
         elif isinstance(ph, RedistributePhase):
-            tail = _sdiv(ph.bytes_per_gpu, float(topo.intra_a2a_bw.min()))
+            tail = _tail_redistribute_time(
+                topo, ph.bytes_per_gpu,
+                perm_stages[-1] if perm_stages else None)
             if ph.charge_alpha:
                 tail += topo.alpha
             add("tail", tail)

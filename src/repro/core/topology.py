@@ -229,6 +229,23 @@ class Topology:
                 and np.all(self.nic_bw == self.nic_bw.flat[0])
                 and self.oversubscription == 1.0)
 
+    def pair_capacity(self) -> np.ndarray:
+        """(n, n) aggregate bandwidth each server pair can sustain.
+
+        Rail-aligned fabric: rail g of the (src, dst) pair is capped by the
+        slower of the two endpoint NICs, so the pair carries at most
+        ``sum_g min(nic_bw[src, g], nic_bw[dst, g])`` bytes/s in each
+        direction.  Zero on the diagonal (a server is not a pair with
+        itself) and for fully disconnected pairs (every rail failed).  This
+        is the per-edge weight of the capacity-aware Birkhoff synthesis
+        (``birkhoff_decompose(..., capacity_aware=True)``) and the
+        denominator of its time-domain traffic matrix.
+        """
+        caps = np.minimum(self.nic_bw[:, None, :],
+                          self.nic_bw[None, :, :]).sum(axis=-1)
+        np.fill_diagonal(caps, 0.0)
+        return caps
+
     def nic_shares(self) -> np.ndarray:
         """(n, n, m) fraction of the (src, dst) server-pair bytes each rail
         should carry so all rails of the pair drain simultaneously.
@@ -305,6 +322,15 @@ class Topology:
     def fail_nic(self, server: int, nic: int) -> "Topology":
         return self.degrade_nic(server, nic, 0.0)
 
+    def degrade_server(self, server: int, factor: float) -> "Topology":
+        """Every NIC of one server at ``factor`` of nominal (thermal
+        throttling, PCIe fault): the whole server becomes a slow rail set."""
+        if not 0.0 <= factor <= 1.0:
+            raise ValueError(f"degrade factor must be in [0, 1], got {factor}")
+        nic_bw = self.nic_bw.copy()
+        nic_bw[server] *= factor
+        return self.with_nic_bw(nic_bw)
+
     def with_oversubscription(self, factor: float) -> "Topology":
         return dataclasses.replace(self, oversubscription=float(factor))
 
@@ -320,13 +346,23 @@ class Topology:
     # -- identity --------------------------------------------------------
 
     def fingerprint(self) -> str:
-        """Stable content hash: keys PlanCache entries and stamps Plans."""
-        h = hashlib.blake2b(digest_size=16)
-        for f in self.fabrics:
-            h.update(repr((f.intra_topology, f.b_intra, f.m_gpus)).encode())
-        h.update(self.nic_bw.tobytes())
-        h.update(repr((self.alpha, self.oversubscription)).encode())
-        return h.hexdigest()
+        """Stable content hash: keys PlanCache entries and stamps Plans.
+
+        Computed once and memoized -- the instance is immutable (frozen
+        dataclass, read-only nic_bw) and the hash sits on the per-miss
+        cache path, where traffic/family/plan keys would otherwise each
+        re-hash the full NIC matrix."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.blake2b(digest_size=16)
+            for f in self.fabrics:
+                h.update(repr((f.intra_topology, f.b_intra,
+                               f.m_gpus)).encode())
+            h.update(self.nic_bw.tobytes())
+            h.update(repr((self.alpha, self.oversubscription)).encode())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     def __eq__(self, other) -> bool:
         if not isinstance(other, Topology):

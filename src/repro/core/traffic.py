@@ -34,6 +34,7 @@ __all__ = [
     "random_workload",
     "skewed_workload",
     "moe_workload",
+    "capacity_matched_workload",
     "server_reduce",
 ]
 
@@ -133,8 +134,18 @@ class Workload:
 
     @property
     def topo(self) -> Topology:
-        """The fabric to schedule against (derived when not explicit)."""
-        return self.topology or Topology.from_cluster(self.cluster)
+        """The fabric to schedule against (derived when not explicit).
+
+        The derived homogeneous Topology is memoized so repeated accesses
+        (fingerprinting, synthesis, execution) share one instance -- and
+        with it, its memoized ``fingerprint()``."""
+        if self.topology is not None:
+            return self.topology
+        derived = self.__dict__.get("_derived_topo")
+        if derived is None:
+            derived = Topology.from_cluster(self.cluster)
+            object.__setattr__(self, "_derived_topo", derived)
+        return derived
 
     @property
     def total_bytes(self) -> float:
@@ -212,6 +223,25 @@ def skewed_workload(
     w = np.zeros((n, n))
     w[~np.eye(n, dtype=bool)] = sizes
     return Workload(cluster, w, topo)
+
+
+def capacity_matched_workload(
+    topology: Topology, mean_size: float, seed: int = 0
+) -> Workload:
+    """Random traffic scaled to follow pair capacity: a serving load
+    balancer keeps slow servers lightly loaded, so pairwise sizes are
+    ``random_workload`` entries scaled by the normalized server-pair
+    capacity (``Topology.pair_capacity``).  The regime where
+    capacity-aware synthesis pays: capacity-blind equal-byte slots park
+    fast pairs behind lightly-loaded slow stragglers (DESIGN.md 1d).
+    """
+    w = random_workload(topology, mean_size, seed=seed)
+    caps = topology.pair_capacity()
+    scale = caps / max(float(caps.max()), 1.0)
+    np.fill_diagonal(scale, 1.0)
+    m = topology.m_gpus
+    mat = w.matrix * np.kron(scale, np.ones((m, m)))
+    return Workload(w.cluster, mat, w.topology)
 
 
 def moe_workload(

@@ -1,0 +1,371 @@
+"""Capacity-aware Birkhoff synthesis (issue 4 tentpole).
+
+Invariants of ``birkhoff_decompose(..., capacity_aware=True)`` plans on
+heterogeneous fabrics (byte conservation, stage bound, slot-vs-rail
+feasibility, ascending durations), the bit-identity of the capacity-blind
+path, the ``flash_ca`` scheduler end to end (speedups over blind synthesis
+on degraded/mixed fabrics, validation, serialization, warm repair), and
+the Plan-level feasibility check.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    PlanCache,
+    PlanValidationError,
+    Topology,
+    birkhoff_decompose,
+    capacity_matched_workload,
+    get_scheduler,
+    max_line_sum,
+    random_workload,
+    simulate,
+    stage_duration,
+)
+from repro.core.plan import PermutationStage
+from repro.core.traffic import Workload
+
+
+def _homo(n=4, m=8):
+    return Topology.homogeneous(n, m, b_intra=64e9, b_inter=12.5e9)
+
+
+def _mixed_servers(n=4, m=8):
+    """Half the servers on 100G NICs, half on 400G."""
+    speeds = [12.5e9] * (n // 2) + [50e9] * (n - n // 2)
+    return _homo(n, m).with_server_nic_speeds(speeds)
+
+
+def _hetero_topo(n, scenario):
+    return {
+        "degraded_server": lambda: _homo(n, 4).degrade_server(n // 2, 0.25),
+        "mixed_servers": lambda: _mixed_servers(n, 4),
+        "degraded_nic": lambda: _homo(n, 4).degrade_nic(0, 1, 0.1),
+        "failed_nic": lambda: _homo(n, 4).fail_nic(n - 1, 0),
+    }[scenario]()
+
+
+def _matrices(max_n=6, max_v=1000.0):
+    return st.integers(2, max_n).flatmap(
+        lambda n: st.lists(
+            st.lists(st.floats(0, max_v, allow_nan=False), min_size=n,
+                     max_size=n),
+            min_size=n, max_size=n,
+        ).map(lambda rows: _zero_diag(np.array(rows))))
+
+
+def _zero_diag(t):
+    np.fill_diagonal(t, 0.0)
+    return t
+
+
+# -- decomposition invariants ----------------------------------------------
+
+
+def _check_aware_invariants(t, topo):
+    """Aware stages conserve bytes on the support, keep the classic
+    n^2 - 2n + 2 stage bound, stay incast-free, and never give a pair a
+    slot its rails cannot drain inside the stage window."""
+    n = t.shape[0]
+    stages = birkhoff_decompose(t.copy(), topology=topo, capacity_aware=True)
+    recon = sum((s.as_matrix(n) for s in stages), np.zeros_like(t))
+    np.testing.assert_allclose(recon, t, atol=1e-6 * max(t.max(), 1.0))
+    assert np.all(recon[t == 0] <= 1e-6 * max(t.max(), 1.0))
+    assert len(stages) <= n * n - 2 * n + 2
+    caps = topo.pair_capacity()
+    shares = topo.nic_shares()
+    durations = []
+    for s in stages:
+        dsts = [j for j in s.perm if j >= 0]
+        assert len(dsts) == len(set(dsts))
+        assert all(i != j for i, j in enumerate(s.perm))
+        dur = stage_duration(s, caps)
+        durations.append(dur)
+        for i, j in enumerate(s.perm):
+            if j < 0:
+                continue
+            slot = s.slots[i] if s.slots is not None else s.size
+            assert s.sent[i] <= slot * (1 + 1e-9)
+            assert slot <= s.size * (1 + 1e-9)
+            # the pair's slot fits its capacity inside the stage window ...
+            if caps[i, j] > 0:
+                assert slot <= dur * caps[i, j] * (1 + 1e-9)
+            # ... and rail by rail, no rail needs longer than the window
+            rail_caps = np.minimum(topo.nic_bw[i], topo.nic_bw[j])
+            rail_bytes = slot * shares[i, j]
+            live_rails = rail_caps > 0
+            assert np.all(rail_bytes[~live_rails] == 0.0)
+            assert np.all(rail_bytes[live_rails]
+                          <= dur * rail_caps[live_rails] * (1 + 1e-9))
+    assert durations == sorted(durations)
+
+
+@pytest.mark.parametrize("scenario", ("degraded_server", "mixed_servers",
+                                      "degraded_nic", "failed_nic"))
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_capacity_aware_invariants_seeded(scenario, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    t = rng.uniform(0, 1000.0, (n, n)) * (rng.random((n, n)) < 0.8)
+    np.fill_diagonal(t, 0.0)
+    _check_aware_invariants(t, _hetero_topo(n, scenario))
+
+
+@settings(max_examples=25, deadline=None)
+@given(_matrices())
+def test_capacity_aware_invariants_property(t):
+    _check_aware_invariants(t, _hetero_topo(t.shape[0], "mixed_servers"))
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2, 3))
+def test_capacity_aware_sum_of_durations_is_optimal(seed):
+    """The schedule's total transfer time equals the time-domain max line
+    sum -- the serialization lower bound for incast-free permutation
+    schedules on the heterogeneous fabric."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 9))
+    t = rng.uniform(0, 1e6, (n, n))
+    np.fill_diagonal(t, 0.0)
+    topo = _mixed_servers(n, 4)
+    caps = topo.pair_capacity()
+    stages = birkhoff_decompose(t.copy(), topology=topo, capacity_aware=True)
+    tau = np.divide(t, caps, out=np.zeros_like(t), where=caps > 0)
+    total = sum(stage_duration(s, caps) for s in stages)
+    assert total <= max_line_sum(tau) * (1 + 1e-6)
+
+
+def _check_blind_path_ignores_topology(t):
+    """capacity_aware=False must stay bit-identical to the PR 3 engines no
+    matter what topology rides along (golden acceptance criterion)."""
+    topo = _homo(t.shape[0], 4).degrade_server(0, 0.25)
+    base = birkhoff_decompose(t.copy())
+    with_topo = birkhoff_decompose(t.copy(), topology=topo,
+                                   capacity_aware=False)
+    ref = birkhoff_decompose(t.copy(), reference=True)
+    assert base == with_topo == ref
+
+
+@pytest.mark.parametrize("seed", (0, 1, 2, 3, 4))
+def test_capacity_blind_path_ignores_topology_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 9))
+    t = rng.uniform(0, 1000.0, (n, n)) * (rng.random((n, n)) < 0.7)
+    np.fill_diagonal(t, 0.0)
+    _check_blind_path_ignores_topology(t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_matrices())
+def test_capacity_blind_path_ignores_topology_property(t):
+    _check_blind_path_ignores_topology(t)
+
+
+def test_capacity_aware_uniform_fabric_degenerates_to_blind():
+    """On uniform pair capacities the time and byte domains coincide, so
+    the aware decomposition is the blind one, bit for bit (no slots)."""
+    rng = np.random.default_rng(3)
+    t = rng.uniform(0, 1e6, (8, 8))
+    np.fill_diagonal(t, 0.0)
+    aware = birkhoff_decompose(t.copy(), topology=_homo(8),
+                               capacity_aware=True)
+    blind = birkhoff_decompose(t.copy())
+    assert aware == blind
+    assert all(s.slots is None for s in aware)
+
+
+def test_capacity_aware_single_server_degenerates():
+    """n=1 has no server pairs at all: aware must take the blind path
+    (which returns no inter stages), not crash on the empty off-diagonal
+    (review regression)."""
+    from repro.core import ClusterSpec
+
+    assert birkhoff_decompose(np.zeros((1, 1)), topology=_homo(1),
+                              capacity_aware=True) == []
+    w = random_workload(ClusterSpec(1, 8), 1 << 20, seed=0)
+    r = simulate(w, "flash_ca")
+    assert r.completion_time == simulate(w, "flash").completion_time
+
+
+def test_capacity_aware_argument_validation():
+    t = np.array([[0.0, 1.0], [1.0, 0.0]])
+    with pytest.raises(ValueError, match="requires topology"):
+        birkhoff_decompose(t, capacity_aware=True)
+    with pytest.raises(ValueError, match="capacity-blind"):
+        birkhoff_decompose(t, topology=_homo(2), capacity_aware=True,
+                           reference=True)
+    with pytest.raises(ValueError, match="servers"):
+        birkhoff_decompose(t, topology=_homo(4), capacity_aware=True)
+
+
+def test_repair_policy_capacity_aware_conserves_bytes():
+    """The repair engine (n > AUTO_EXACT_MAX_N path, forced here) honors
+    the same aware invariants as the exact engine."""
+    rng = np.random.default_rng(5)
+    n = 10
+    t = rng.uniform(0, 1e6, (n, n)) * (rng.random((n, n)) < 0.6)
+    np.fill_diagonal(t, 0.0)
+    topo = _mixed_servers(n, 4)
+    stages = birkhoff_decompose(t.copy(), topology=topo, capacity_aware=True,
+                                policy="repair")
+    recon = sum((s.as_matrix(n) for s in stages), np.zeros_like(t))
+    np.testing.assert_allclose(recon, t, atol=1e-6 * max(t.max(), 1.0))
+    assert len(stages) <= n * n - 2 * n + 2
+
+
+# -- flash_ca end to end ---------------------------------------------------
+
+
+def test_flash_ca_matches_flash_on_homogeneous_fabric():
+    w = random_workload(_homo(), 4 << 20, seed=0)
+    aware = get_scheduler("flash_ca").synthesize(w)
+    blind = get_scheduler("flash").synthesize(w)
+    assert aware.capacity_aware and not blind.capacity_aware
+    assert [p.to_dict() for p in aware.phases] == \
+        [p.to_dict() for p in blind.phases]
+    assert simulate(w, "flash_ca").completion_time == \
+        simulate(w, "flash").completion_time
+
+
+@pytest.mark.parametrize("make_topo", (
+    pytest.param(lambda: _homo().degrade_server(2, 0.25),
+                 id="degraded_nic_server"),
+    pytest.param(lambda: _mixed_servers(), id="mixed_servers_400g_100g"),
+))
+def test_flash_ca_beats_blind_synthesis_on_hetero(make_topo):
+    """Acceptance: capacity-aware FLASH plans execute >= 1.2x faster than
+    capacity-blind plans under the link-level executor on degraded-NIC and
+    mixed 400G/100G fabrics (capacity-matched traffic)."""
+    topo = make_topo()
+    w = capacity_matched_workload(topo, 16 << 20, seed=0)
+    blind = simulate(w, "flash")
+    aware = simulate(w, "flash_ca")
+    assert blind.completion_time >= 1.2 * aware.completion_time
+    # and the aware schedule stays near the Theorem 1 bound
+    assert aware.algbw >= 0.9 * simulate(w, "optimal").algbw
+
+
+def test_flash_ca_plan_validates_and_round_trips():
+    topo = _mixed_servers()
+    w = capacity_matched_workload(topo, 16 << 20, seed=1)
+    plan = get_scheduler("flash_ca").synthesize(w)
+    plan.validate(w)  # conservation + incast + slot-vs-rail feasibility
+    assert plan.capacity_aware
+    perm_stages = [p for p in plan.phases if isinstance(p, PermutationStage)]
+    assert perm_stages and all(p.slots is not None for p in perm_stages)
+    plan2 = type(plan).from_dict(json.loads(json.dumps(plan.to_dict())))
+    assert plan2.to_dict() == plan.to_dict()
+    r1 = simulate(w, "flash_ca", plan=plan)
+    r2 = simulate(w, "flash_ca", plan=plan2)
+    assert r1.completion_time == r2.completion_time
+
+
+def test_validate_rejects_payload_beyond_slot():
+    topo = _mixed_servers()
+    w = capacity_matched_workload(topo, 16 << 20, seed=1)
+    plan = get_scheduler("flash_ca").synthesize(w)
+    phases = []
+    broken = False
+    for p in plan.phases:
+        if not broken and isinstance(p, PermutationStage) \
+                and p.slots is not None and max(p.sent) > 0:
+            i = int(np.argmax(p.sent))
+            slots = list(p.slots)
+            slots[i] = p.sent[i] / 2  # payload no longer fits its slot
+            p = dataclasses.replace(p, slots=tuple(slots))
+            broken = True
+        phases.append(p)
+    assert broken
+    bad = dataclasses.replace(plan, phases=tuple(phases))
+    with pytest.raises(PlanValidationError, match="slot"):
+        bad.validate(w)
+
+
+def test_validate_rejects_blind_shares_on_aware_plan():
+    """The slot-vs-rail feasibility check: uniform rail shares grafted onto
+    a capacity-aware plan over-run the stage window on the degraded rail."""
+    topo = _homo().degrade_nic(2, 3, 0.05)
+    w = capacity_matched_workload(topo, 16 << 20, seed=2)
+    plan = get_scheduler("flash_ca").synthesize(w)
+    plan.validate(w)
+    m = topo.m_gpus
+    uniform = np.full((topo.n_servers, topo.n_servers, m), 1.0 / m)
+    bad = dataclasses.replace(plan, nic_shares=uniform)
+    with pytest.raises(PlanValidationError, match="slot-vs-rail"):
+        bad.validate(w)
+
+
+def test_feasibility_check_not_vacuous_when_stage_touches_failed_pair():
+    """A fully-failed pair (zero pair capacity) makes the stage window
+    infinite; the slot-vs-rail check must still catch bad shares on the
+    stage's *healthy* pairs instead of letting the infinity vouch for
+    them (review regression)."""
+    from repro.core import Plan, ServerFabric
+
+    nic = np.array([[0.0, 1.0], [1.0, 0.0],
+                    [0.2, 1.0], [1.0, 1.0]]) * 12.5e9
+    topo = Topology(fabrics=(ServerFabric(m_gpus=2),) * 4, nic_bw=nic)
+    caps = topo.pair_capacity()
+    assert caps[0, 1] == 0.0 and caps[2, 3] > 0  # failed + degraded pairs
+    window = 0.01
+    slots = tuple(window * max(caps[i, j], 1e8)
+                  for i, j in enumerate((1, 0, 3, 2)))
+    stage = PermutationStage(perm=(1, 0, 3, 2), size=max(slots),
+                             sent=slots, slots=slots)
+    mk = lambda shares: Plan(  # noqa: E731
+        algorithm="flash_ca", cluster=topo.cluster_view(), phases=(stage,),
+        topology=topo, nic_shares=shares, capacity_aware=True)
+    mk(topo.nic_shares())._check_slot_rail_feasibility(1e-6)  # consistent
+    with pytest.raises(PlanValidationError, match="slot-vs-rail"):
+        # Uniform shares over-run the degraded rail of the healthy (2, 3)
+        # pair; pre-fix, the failed (0, 1) pair's infinite window hid it.
+        mk(np.full((4, 4, 2), 0.5))._check_slot_rail_feasibility(1e-6)
+
+
+def test_flash_ca_warm_repair_on_near_miss():
+    flash_ca = get_scheduler("flash_ca")
+    topo = _mixed_servers()
+    w1 = capacity_matched_workload(topo, 16 << 20, seed=3)
+    rng = np.random.default_rng(11)
+    m2 = w1.matrix.copy()
+    drift = rng.random(m2.shape) < 0.02
+    m2[drift] *= rng.uniform(0.8, 1.2, size=int(drift.sum()))
+    np.fill_diagonal(m2, 0.0)
+    w2 = Workload(w1.cluster, m2, w1.topology)
+    warm = flash_ca.repair_plan(flash_ca.synthesize(w1), w2)
+    warm.validate(w2)
+    assert warm.capacity_aware
+    cold = flash_ca.synthesize(w2)
+    t_warm = simulate(w2, "flash_ca", plan=warm).completion_time
+    t_cold = simulate(w2, "flash_ca", plan=cold).completion_time
+    assert t_warm <= 1.5 * t_cold
+
+
+def test_plan_cache_warm_start_works_for_flash_ca():
+    cache = PlanCache(warm_start=True)
+    topo = _mixed_servers()
+    w1 = capacity_matched_workload(topo, 16 << 20, seed=4)
+    rng = np.random.default_rng(13)
+    m2 = w1.matrix.copy()
+    drift = rng.random(m2.shape) < 0.02
+    m2[drift] *= rng.uniform(0.9, 1.1, size=int(drift.sum()))
+    np.fill_diagonal(m2, 0.0)
+    simulate(w1, "flash_ca", cache=cache)
+    simulate(Workload(w1.cluster, m2, w1.topology), "flash_ca", cache=cache)
+    assert (cache.misses, cache.warm_hits) == (2, 1)
+
+
+def test_flash_ca_routes_around_failed_rail():
+    topo = _homo().fail_nic(1, 0)
+    w = random_workload(topo, 4 << 20, seed=0)
+    r = simulate(w, "flash_ca")
+    assert np.isfinite(r.completion_time)
+    get_scheduler("flash_ca").synthesize(w).validate(w)

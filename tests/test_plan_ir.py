@@ -31,7 +31,8 @@ from repro.core import (
 from repro.core.plan import PermutationStage
 from repro.core.schedulers import hierarchical_nic_loads, spreadout_stages
 
-ALGOS = ("optimal", "flash", "spreadout", "fanout", "hierarchical")
+ALGOS = ("optimal", "flash", "flash_ca", "spreadout", "fanout",
+         "hierarchical")
 
 CLUSTERS = {
     "c48": ClusterSpec(4, 8),
@@ -135,7 +136,8 @@ GOLDEN = {
 }
 
 
-def test_registry_has_all_five():
+def test_registry_has_all_schedulers():
+    """The paper's five algorithms plus the capacity-aware FLASH opt-in."""
     assert set(ALGOS) == set(available_schedulers())
 
 

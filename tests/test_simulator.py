@@ -117,6 +117,101 @@ def test_synthesis_time_micro():
     assert t < 0.05  # 50 ms worst case on a slow CI box; paper: ~15-32 us
 
 
+def test_redistribute_charged_at_receiver_fabric_not_cluster_min():
+    """Regression (issue 4 satellite): a stage's hidden redistribute rides
+    the fabrics of the servers the stage actually touches.  The old model
+    charged every stage at the cluster-wide slowest fabric
+    (``intra_a2a_bw.min()``), overcharging fast servers on mixed fabrics.
+    """
+    from repro.core import PermutationStage, ServerFabric, Topology
+    from repro.core.simulator import _permutation_times
+
+    slow = ServerFabric(intra_topology="ring", b_intra=8e9, m_gpus=4)
+    fast = ServerFabric(intra_topology="full_mesh", b_intra=64e9, m_gpus=4)
+    topo = Topology(fabrics=(slow, fast, fast, fast),
+                    nic_bw=np.full((4, 4), 12.5e9), alpha=0.0)
+    m = 4
+    shares = np.full((4, 4, m), 1.0 / m)
+    pair_cap = m * 12.5e9  # all rails equal: min-endpoint sum
+    a2a_slow = slow.a2a_bandwidth()   # ring, m=4: 2 * b_intra = 16e9
+    a2a_fast = fast.a2a_bandwidth()   # full mesh: 3 * b_intra = 192e9
+    assert a2a_slow == 16e9 and a2a_fast == 192e9
+
+    def mk(perm, size):
+        sent = tuple(float(size) if j >= 0 else 0.0 for j in perm)
+        return PermutationStage(perm=perm, size=float(size), sent=sent)
+
+    # Stage 1's receivers are all fast servers {1, 2, 3}; its redistribute
+    # (100e6/4 bytes per GPU over 192e9) hides entirely under stage 2's
+    # transfer.  The old cluster-min model charged it over server 0's ring
+    # (16e9) and found a large un-hidden residual that does not exist.
+    fast_only = [mk((-1, 2, 3, 1), 100e6), mk((-1, 2, 3, 1), 20e6)]
+    out = _permutation_times(topo, fast_only, shares)
+    t_next = 20e6 / pair_cap
+    assert (100e6 / m) / a2a_fast < t_next  # genuinely hidden
+    assert out["hidden_residual"] == 0.0
+    old_residual = (100e6 / m) / a2a_slow - t_next
+    assert old_residual > 0  # the two models provably diverge here
+
+    # Control: when the slow server *is* a receiver, both models agree.
+    touching = [mk((1, 0, -1, -1), 100e6), mk((1, 0, -1, -1), 20e6)]
+    out2 = _permutation_times(topo, touching, shares)
+    assert out2["hidden_residual"] == pytest.approx(old_residual, rel=1e-12)
+
+
+def test_tail_redistribute_charged_at_last_stage_receivers():
+    """The tail RedistributePhase is the last stage's redistribute: it
+    rides that stage's receiver fabrics, not the cluster-wide slowest."""
+    from repro.core import (PermutationStage, Plan, RedistributePhase,
+                            ServerFabric, Topology, execute_plan)
+
+    slow = ServerFabric(intra_topology="ring", b_intra=8e9, m_gpus=4)
+    fast = ServerFabric(intra_topology="full_mesh", b_intra=64e9, m_gpus=4)
+    topo = Topology(fabrics=(slow, fast, fast, fast),
+                    nic_bw=np.full((4, 4), 12.5e9), alpha=0.0)
+    w = balanced_workload(topo, 1 << 20)
+    t_server = w.server_matrix()
+    size = float(t_server[1, 2])
+    # One stage among the fast servers only; the tail must ride their
+    # full-mesh fabric (192e9), not server 0's ring (16e9).
+    stage = PermutationStage(perm=(-1, 2, 3, 1), size=size,
+                             sent=(0.0, size, size, size))
+    tail_bytes = size / 4
+    plan = Plan(algorithm="flash", cluster=topo.cluster_view(),
+                phases=(stage,
+                        RedistributePhase(bytes_per_gpu=tail_bytes,
+                                          charge_alpha=False)),
+                accounts_intra=False, topology=topo)
+    r = execute_plan(plan, w)
+    assert r.breakdown["tail"] == pytest.approx(
+        tail_bytes / fast.a2a_bandwidth(), rel=1e-12)
+    # Hierarchical-style plans (no permutation stages) keep the
+    # conservative cluster-min charge.
+    plan_no_perm = Plan(algorithm="hierarchical", cluster=topo.cluster_view(),
+                        phases=(RedistributePhase(bytes_per_gpu=tail_bytes,
+                                                  charge_alpha=False),),
+                        accounts_intra=False, topology=topo)
+    r2 = execute_plan(plan_no_perm, w)
+    assert r2.breakdown["tail"] == pytest.approx(
+        tail_bytes / slow.a2a_bandwidth(), rel=1e-12)
+
+
+def test_redistribute_charge_mixed_fabric_end_to_end():
+    """On a mixed intra-fabric cluster the per-receiver charge keeps FLASH
+    executable and fully accounted (breakdown sums to completion)."""
+    from repro.core import ServerFabric, Topology
+
+    slow = ServerFabric(intra_topology="ring", b_intra=8e9, m_gpus=4)
+    fast = ServerFabric(intra_topology="full_mesh", b_intra=64e9, m_gpus=4)
+    topo = Topology(fabrics=(slow, fast, fast, fast),
+                    nic_bw=np.full((4, 4), 12.5e9))
+    w = random_workload(topo, 4 << 20, seed=0)
+    r = simulate(w, "flash")
+    assert np.isfinite(r.completion_time) and r.completion_time > 0
+    assert np.isclose(sum(r.breakdown.values()), r.completion_time,
+                      rtol=1e-9)
+
+
 def test_memory_overhead_slope():
     """Paper Fig 17b: FLASH ~2.6x workload bytes vs baseline 2x."""
     w = random_workload(C0, 8 << 20, seed=3)

@@ -127,6 +127,66 @@ def test_plan_cache_clear_resets_warm_state():
     assert cache.warm_hits == 0
 
 
+# -- family-index hygiene under LRU eviction (issue 4 satellite) -----------
+
+
+def test_plan_cache_family_index_stays_bounded_past_capacity():
+    """Filling past ``capacity`` with same-family traffic must not grow the
+    family index (the pre-fix cache leaked one entry per family forever and
+    could point at evicted keys), and warm repair must still fire from the
+    surviving plans afterwards."""
+    cache = PlanCache(capacity=3, warm_start=True)
+    ws = [moe_workload(C, 8192, 4096, top_k=2, seed=s) for s in range(8)]
+    for w in ws:
+        simulate(w, "flash", cache=cache)
+    assert len(cache) == 3
+    assert len(cache._family) == 1
+    # the family pointer references a live key, never an evicted one
+    assert set(cache._family.values()) <= set(cache._store)
+    # warm repair still fires: a near-miss of the most recent workload
+    simulate(_near_miss(ws[-1], seed=31), "flash", cache=cache)
+    assert cache.warm_hits >= 1
+
+
+def test_plan_cache_family_index_pruned_across_many_families():
+    """Distinct fabrics are distinct families: under eviction churn the
+    family index must stay bounded by the store, not accumulate one stale
+    entry per fabric ever seen (long-running serving leak)."""
+    cache = PlanCache(capacity=4, warm_start=True)
+    base = Topology.from_cluster(C)
+    for i in range(12):
+        topo = base.degrade_nic(i % C.n_servers, i % C.m_gpus,
+                                0.9 - 0.05 * i)
+        w = moe_workload(topo, 1024, 512, top_k=2, seed=i)
+        simulate(w, "flash", cache=cache)
+    assert len(cache) == 4
+    assert len(cache._family) <= 4
+    assert set(cache._family.values()) <= set(cache._store)
+    assert len(cache._key_family) == len(cache._store)
+    assert sum(cache._family_count.values()) == len(cache._store)
+
+
+def test_plan_cache_family_repoints_to_surviving_plan_on_eviction():
+    """When the family's latest plan is evicted but an older same-family
+    plan survives (it was touched more recently), the family pointer must
+    repoint to the survivor so warm starts keep seeding from it."""
+    cache = PlanCache(capacity=2, warm_start=True)
+    w_a = moe_workload(C, 8192, 4096, top_k=2, seed=40)
+    w_b = Workload(C, w_a.matrix * 3.0)  # same family, no near-miss of A
+    simulate(w_a, "flash", cache=cache)   # store A (family F -> A)
+    simulate(w_b, "flash", cache=cache)   # store B (family F -> B)
+    simulate(w_a, "flash", cache=cache)   # touch A: B is now LRU
+    other = moe_workload(ClusterSpec(n_servers=4, m_gpus=8), 8192, 4096,
+                         top_k=2, seed=41)
+    simulate(other, "flash", cache=cache)  # store C: evicts B
+    key_a = traffic_fingerprint(w_a, "flash")
+    fam = cluster_family_key(w_a, "flash")
+    assert cache._family[fam] == key_a
+    # warm start now seeds from the survivor A
+    simulate(_near_miss(w_a, seed=43), "flash", cache=cache)
+    assert cache.warm_hits == 1
+
+
 # -- synthesis_time argument validation (issue satellite) ------------------
 
 

@@ -1,17 +1,31 @@
-"""CI synthesis-time regression guard.
+"""CI perf-budget guard over the BENCH_*.json trajectory.
 
-Reads a ``benchmarks.run --json`` snapshot and fails if the flash
-schedule-synthesis rows exceed generous absolute budgets.  The budgets are
-deliberately loose (several times the observed times on a laptop-class CPU)
-so CI variance never flakes, while an accidental return to interpreted
-per-stage Python -- the seed's O(n^2)-adjacency-rebuild decomposer is ~30x
-over the n=32 budget and minutes over the n=256 one -- fails loudly.
+Reads a ``benchmarks.run --json`` snapshot and fails on performance
+regressions in the guarded series.  Three kinds of budget:
 
-The ``synth.hetero{n}`` rows (emitted by fig_hetero) additionally guard the
-*relative* cost of capacity-aware synthesis: flash_ca must stay within 2x
-of blind flash synthesis on the same degraded-NIC fabric (observed ~1.3x;
-the time-domain decomposition shares the blind engines' matching machinery,
-so a larger ratio means an accidental extra pass crept in).
+  * **Absolute synthesis budgets** (``BUDGETS``): the flash
+    schedule-synthesis rows must stay under generous absolute ceilings
+    (several times the observed laptop-class times, so CI variance never
+    flakes) -- an accidental return to the interpreted per-stage
+    decomposer (the seed is ~30x over the n=32 budget, minutes over the
+    n=256 one) fails loudly.
+
+  * **Ratio budgets** (``RATIO_BUDGETS``): the ``synth.hetero{n}`` rows
+    (fig_hetero) guard the *relative* cost of capacity-aware synthesis --
+    flash_ca must stay within 2x of blind flash on the same degraded
+    fabric (observed ~1.3x; the time-domain decomposition shares the
+    blind engines' matching machinery, so a larger ratio means an
+    accidental extra pass crept in).
+
+  * **Executor budgets** (``EXEC_BUDGETS`` / ``EXEC_SPEEDUP_FLOORS``):
+    the ``exec.*`` rows (fig_dynamic) guard compiled plan execution.
+    Each series records a baseline (generous multiples of the observed
+    times); compiled execution regressing past ``1.5x`` its baseline
+    fails -- that is the margin between "CI box is slow" and "someone
+    reintroduced per-stage Python on the serving hot path".  The
+    ``exec.cached{n}`` row additionally enforces the issue-5 acceptance
+    bar: compiled re-execution of a cached plan must stay >= 10x faster
+    than the interpreted oracle (observed ~1000x).
 
 Usage:  python -m benchmarks.check_synth_budget BENCH_ci.json
 """
@@ -32,6 +46,20 @@ BUDGETS = {
 RATIO_BUDGETS = {
     "synth.hetero16": 2.0,  # observed ~1.3x
     "synth.hetero32": 2.0,  # observed ~1.3x
+}
+
+# series name (emitted by fig_dynamic) -> recorded baseline in microseconds.
+# A row regressing past EXEC_REGRESSION_FACTOR x its baseline fails CI.
+EXEC_BUDGETS = {
+    "exec.cached32": 200.0,     # observed ~17us (955-stage FLASH plan)
+    "exec.batch32": 400.0,      # observed ~36us/matrix
+    "exec.compile32": 60_000.0,  # observed ~8ms, paid once per plan
+}
+EXEC_REGRESSION_FACTOR = 1.5
+
+# series name -> min derived[speedup] vs the interpreted oracle.
+EXEC_SPEEDUP_FLOORS = {
+    "exec.cached32": 10.0,  # issue-5 acceptance bar; observed ~1000x
 }
 
 
@@ -70,6 +98,40 @@ def check(path: str) -> int:
         else:
             print(f"ok   {name}: capacity-aware/blind = {ratio:.2f}x "
                   f"<= {max_ratio:.1f}x")
+    for name, baseline in sorted(EXEC_BUDGETS.items()):
+        rec = records.get(name)
+        if rec is None:
+            print(f"FAIL {name}: missing from {path} (benchmark renamed or "
+                  "skipped?)")
+            status = 1
+            continue
+        us = float(rec["us_per_call"])
+        ceiling = EXEC_REGRESSION_FACTOR * baseline
+        if us > ceiling:
+            print(f"FAIL {name}: {us:.1f}us regresses "
+                  f"{us / baseline:.2f}x past the {baseline:.0f}us baseline "
+                  f"(> {EXEC_REGRESSION_FACTOR:.1f}x)")
+            status = 1
+        else:
+            print(f"ok   {name}: {us:.1f}us <= {ceiling:.0f}us "
+                  f"({EXEC_REGRESSION_FACTOR:.1f}x of baseline)")
+    for name, floor in sorted(EXEC_SPEEDUP_FLOORS.items()):
+        rec = records.get(name)
+        speedup = (rec or {}).get("derived", {}).get("speedup", "")
+        speedup = speedup.rstrip("x") if speedup else None
+        if rec is None or not speedup:
+            print(f"FAIL {name}: missing from {path} (or no speedup "
+                  "column; benchmark renamed or skipped?)")
+            status = 1
+            continue
+        ratio = float(speedup)
+        if ratio < floor:
+            print(f"FAIL {name}: compiled execution only {ratio:.1f}x the "
+                  f"interpreted oracle (< {floor:.0f}x floor)")
+            status = 1
+        else:
+            print(f"ok   {name}: compiled/interpreted = {ratio:.0f}x "
+                  f">= {floor:.0f}x")
     return status
 
 

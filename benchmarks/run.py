@@ -10,6 +10,7 @@ so successive runs accumulate a perf trajectory.  Modules:
   fig16  intra-server topology + bandwidth-ratio sweep
   fig17  scheduler synthesis time + memory overhead slope
   hetero heterogeneous fabrics: degraded/failed/mixed NICs, oversubscription
+  dynamic  drifting-MoE serving loop: cache + warm start + compiled executor
   roofline  per-(arch x shape x mesh) terms from the dry-run sweep
 """
 
@@ -24,6 +25,7 @@ from . import (
     fig15_scale,
     fig16_topo,
     fig17_overhead,
+    fig_dynamic,
     fig_hetero,
     roofline_table,
 )
@@ -31,7 +33,8 @@ from .common import Csv
 
 
 MODULES = (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
-           fig16_topo, fig17_overhead, fig_hetero, roofline_table)
+           fig16_topo, fig17_overhead, fig_hetero, fig_dynamic,
+           roofline_table)
 
 
 def main(argv=None) -> None:

@@ -36,8 +36,16 @@ from .schedulers import (
     register_scheduler,
     synthesis_time,
 )
-from .simulator import ALGORITHMS, SimResult, execute_plan, simulate
-from .topology import ServerFabric, Topology
+from .simulator import (
+    ALGORITHMS,
+    ExecutableSchedule,
+    SimResult,
+    compile_plan,
+    execute_plan,
+    simulate,
+    simulate_many,
+)
+from .topology import ServerFabric, Topology, uniform_nic_shares
 from .traffic import (
     ClusterSpec,
     Workload,
@@ -81,10 +89,14 @@ __all__ = [
     "synthesis_time",
     "ALGORITHMS",
     "SimResult",
+    "ExecutableSchedule",
+    "compile_plan",
     "simulate",
+    "simulate_many",
     "execute_plan",
     "ServerFabric",
     "Topology",
+    "uniform_nic_shares",
     "ClusterSpec",
     "Workload",
     "balanced_workload",

@@ -93,6 +93,7 @@ __all__ = [
     "birkhoff_decompose",
     "max_line_sum",
     "live_slots",
+    "live_slots_batch",
     "stage_duration",
     "AUTO_EXACT_MAX_N",
 ]
@@ -609,6 +610,29 @@ def live_slots(perm, slots, size: float):
     slot = (np.asarray(slots, dtype=np.float64)[src] if slots is not None
             else np.full(src.size, float(size)))
     return src, dst, slot
+
+
+def live_slots_batch(perms, slots):
+    """Batched ``live_slots`` over ``S`` stacked stages.
+
+    Args:
+      perms: (S, n) int array of stage permutations (-1 = idle sender).
+      slots: (S, n) float array of per-sender slot bytes; the caller fills
+        capacity-blind rows with the stage's uniform ``size``.
+
+    Returns ``(mask, dst, slot)``: the (S, n) live-sender mask, the
+    destination indices clipped to 0 where idle (safe for fancy indexing),
+    and the slot bytes zeroed where idle -- so downstream vectorized math
+    can run over the full padded arrays with dead senders contributing
+    exactly nothing.  This is the compile-time counterpart of the
+    per-stage ``live_slots`` idiom (used by the plan compiler in
+    simulator.py to time all permutation stages in one pass).
+    """
+    perms = np.asarray(perms, dtype=np.int64)
+    mask = perms >= 0
+    dst = np.where(mask, perms, 0)
+    slot = np.where(mask, np.asarray(slots, dtype=np.float64), 0.0)
+    return mask, dst, slot
 
 
 def _stage_to_bytes(s: Stage, caps: np.ndarray, n: int) -> Optional[Stage]:

@@ -46,7 +46,8 @@ from typing import Any, ClassVar, Dict, Optional, Tuple
 
 import numpy as np
 
-from .topology import Topology
+from .birkhoff import live_slots
+from .topology import Topology, uniform_nic_shares
 from .traffic import ClusterSpec, Workload, server_reduce
 
 __all__ = [
@@ -162,6 +163,21 @@ class PermutationStage(PhaseBase):
     @property
     def real_bytes(self) -> float:
         return float(sum(self.sent))
+
+    def live(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Memoized ``live_slots`` of this stage: ``(src, dst, slot)``.
+
+        The interpreted executor consults a stage's live senders up to
+        three times (transfer, hidden redistribute, pipeline tail) and the
+        validator once more; the stage is frozen, so the extraction is
+        computed once and shared.  The arrays are read-only."""
+        cached = self.__dict__.get("_live")
+        if cached is None:
+            cached = live_slots(self.perm, self.slots, self.size)
+            for a in cached:
+                a.flags.writeable = False
+            object.__setattr__(self, "_live", cached)
+        return cached
 
     def to_dict(self):
         d = {"kind": self.kind, "perm": list(self.perm),
@@ -392,6 +408,35 @@ class Plan:
             object.__setattr__(self, "_derived_topo", derived)
         return derived
 
+    def compile(self, topology: Optional[Topology] = None):
+        """Compile this plan for repeated execution: an ExecutableSchedule.
+
+        The compiler (``simulator.compile_plan``) flattens every phase
+        into padded array form and times the whole plan in one vectorized
+        pass; the result answers ``execute(w)`` / ``execute_batch(stack)``
+        with no per-stage Python at all.  Compiled schedules are memoized
+        on the plan per *execution-topology* fingerprint -- the compiled
+        cache slot that rides along with the Plan inside a ``PlanCache``,
+        so a cache hit skips synthesis *and* compilation, and a topology
+        change (new fingerprint) transparently recompiles instead of
+        serving stale link capacities.
+        """
+        from .simulator import compile_plan
+
+        topo = topology if topology is not None else self.topo
+        memo = self.__dict__.get("_compiled")
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_compiled", memo)
+        key = topo.fingerprint()
+        sched = memo.get(key)
+        if sched is None:
+            sched = compile_plan(self, topology=topo)
+            if len(memo) >= 8:  # serving loops see 1-2 fabrics per plan
+                memo.clear()
+            memo[key] = sched
+        return sched
+
     @property
     def stages(self) -> Tuple[PhaseBase, ...]:
         """The inter-server stage phases, in execution order."""
@@ -538,18 +583,17 @@ class Plan:
         its infinite window vouch for the *healthy* pairs would make the
         check vacuous exactly when the fabric is most degraded.
         """
-        from .birkhoff import live_slots
         from .topology import bw_div
 
         topo = self.topo
         caps = topo.pair_capacity()
         m = topo.m_gpus
         shares = (self.nic_shares if self.nic_shares is not None
-                  else np.full((topo.n_servers, topo.n_servers, m), 1.0 / m))
+                  else uniform_nic_shares(topo.n_servers, m))
         for k, p in enumerate(self.phases):
             if not isinstance(p, PermutationStage):
                 continue
-            src, dst, slot = live_slots(p.perm, p.slots, p.size)
+            src, dst, slot = p.live()
             finite = caps[src, dst] > 0
             src, dst, slot = src[finite], dst[finite], slot[finite]
             if src.size == 0:
@@ -641,6 +685,12 @@ class PlanCache:
     a repaired plan is byte-conserving and incast-free but generally a
     slightly longer stage list than cold synthesis, so reuse-vs-quality is
     an explicit opt-in.
+
+    Compiled execution rides along for free: ``Plan.compile`` memoizes its
+    ``ExecutableSchedule`` *on the plan object*, keyed by the execution
+    topology's fingerprint, so a cache hit hands back a plan whose
+    compiled schedule is already attached -- the serving loop skips
+    synthesis and compilation and pays only the O(1) compiled execute.
     """
 
     def __init__(self, capacity: int = 256, warm_start: bool = False):

@@ -52,6 +52,7 @@ from .plan import (
     RedistributePhase,
     traffic_fingerprint,
 )
+from .topology import uniform_nic_shares
 from .traffic import ClusterSpec, Workload, server_reduce
 
 __all__ = [
@@ -189,8 +190,11 @@ class FlashScheduler(Scheduler):
         # capacity, min(src NIC, dst NIC) per rail (topology-aware
         # rebalance): on a homogeneous fabric this is the paper's uniform
         # T/m split; with degraded or mixed-speed NICs the fast rails carry
-        # more so every rail of a pair drains simultaneously.
-        shares = w.topo.nic_shares()  # (n, n, m): [src, dst, rail]
+        # more so every rail of a pair drains simultaneously.  Homogeneous
+        # fabrics share the memoized uniform array instead of recomputing
+        # the capacity mins on every synthesis (serving-loop hot path).
+        shares = (uniform_nic_shares(n, m) if w.topo.is_homogeneous
+                  else w.topo.nic_shares())  # (n, n, m): [src, dst, rail]
         per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
         target = t_server[:, None, :] * shares.transpose(0, 2, 1)  # (n, m, n)
         excess = np.maximum(per_gpu_dest - target, 0.0)

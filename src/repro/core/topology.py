@@ -27,6 +27,7 @@ replayed on a different fabric can never be served a stale plan.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Any, Dict, Optional, Sequence, Tuple
 
@@ -39,7 +40,23 @@ __all__ = [
     "fabric_a2a_bandwidth",
     "bw_div",
     "bw_sdiv",
+    "uniform_nic_shares",
 ]
+
+
+@functools.lru_cache(maxsize=64)
+def uniform_nic_shares(n_servers: int, m_gpus: int) -> np.ndarray:
+    """Memoized uniform ``(n, n, m)`` rail-share fallback (``1/m`` per rail).
+
+    The executor, the Plan validator and the homogeneous synthesis path all
+    need this array whenever a plan carries no explicit ``nic_shares``;
+    memoizing per shape means a serving loop stops paying an O(n^2 m)
+    allocation on every executed plan.  The array is frozen read-only
+    because every caller shares the same instance.
+    """
+    shares = np.full((n_servers, n_servers, m_gpus), 1.0 / m_gpus)
+    shares.flags.writeable = False
+    return shares
 
 
 def bw_div(x, bw) -> np.ndarray:

@@ -1,0 +1,374 @@
+"""Compiled plan execution (issue 5 tentpole).
+
+Parity of the compiled executor (``Plan.compile`` -> ``ExecutableSchedule``)
+with the interpreted oracle (``execute_plan(reference=True)``) across every
+registered scheduler x heterogeneous topologies x skewed workloads;
+``execute_batch`` / ``simulate_many`` equivalence with the one-at-a-time
+pipeline on a drifting-MoE trajectory; the compiled-schedule memo slot; and
+the issue's satellite regressions (cache seeding from a pre-synthesized
+plan, memoized uniform rail shares, memoized per-stage ``live_slots``).
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import (
+    ClusterSpec,
+    PermutationStage,
+    Plan,
+    PlanCache,
+    RedistributePhase,
+    ServerFabric,
+    Topology,
+    available_schedulers,
+    compile_plan,
+    execute_plan,
+    get_scheduler,
+    moe_workload,
+    random_workload,
+    simulate,
+    simulate_many,
+    skewed_workload,
+    traffic_fingerprint,
+    uniform_nic_shares,
+)
+from repro.core.birkhoff import live_slots
+from repro.core.traffic import Workload
+
+PARITY_RTOL = 1e-12
+
+
+def _homo(n=4, m=4):
+    return Topology.homogeneous(n, m, b_intra=64e9, b_inter=12.5e9)
+
+
+def _topology(kind, n=4, m=4):
+    h = _homo(n, m)
+    return {
+        "uniform": lambda: h,
+        "degraded_nic": lambda: h.degrade_nic(n // 2, m - 1, 0.25),
+        "failed_nic": lambda: h.fail_nic(1 % n, 0),
+        "mixed_speeds": lambda: h.with_server_nic_speeds(
+            [12.5e9] * (n // 2) + [50e9] * (n - n // 2)),
+        "oversubscribed": lambda: h.with_oversubscription(2.0),
+        "mixed_fabrics": lambda: Topology(
+            fabrics=(ServerFabric("ring", 8e9, m),)
+            + (ServerFabric("full_mesh", 64e9, m),) * (n - 1),
+            nic_bw=np.full((n, m), 12.5e9)),
+    }[kind]()
+
+
+TOPO_KINDS = ("uniform", "degraded_nic", "failed_nic", "mixed_speeds",
+              "oversubscribed", "mixed_fabrics")
+
+
+def _workload(topo, kind, seed=2):
+    return {
+        "skewed": lambda: skewed_workload(topo, 4 << 20, 1.2, seed=seed),
+        "moe": lambda: moe_workload(topo, 4096, 2048, top_k=2, seed=seed),
+        "random": lambda: random_workload(topo, 4 << 20, seed=seed),
+    }[kind]()
+
+
+def _rel(a, b):
+    if a == b:  # covers inf == inf and exact zeros
+        return 0.0
+    return abs(a - b) / max(abs(a), abs(b), 1e-30)
+
+
+def _assert_parity(plan, w, topology=None):
+    ref = execute_plan(plan, w, topology=topology, reference=True)
+    got = execute_plan(plan, w, topology=topology)
+    assert _rel(ref.completion_time, got.completion_time) <= PARITY_RTOL
+    assert _rel(ref.algbw, got.algbw) <= PARITY_RTOL
+    assert _rel(ref.memory_bytes, got.memory_bytes) <= PARITY_RTOL
+    assert ref.n_stages == got.n_stages
+    assert ref.algorithm == got.algorithm
+    assert set(ref.breakdown) == set(got.breakdown)
+    for k, v in ref.breakdown.items():
+        assert _rel(v, got.breakdown[k]) <= PARITY_RTOL, (k, v,
+                                                          got.breakdown[k])
+    return ref, got
+
+
+# -- compiled-vs-interpreted parity ---------------------------------------
+
+
+@pytest.mark.parametrize("algo", sorted(available_schedulers()))
+@pytest.mark.parametrize("topo_kind", TOPO_KINDS)
+@pytest.mark.parametrize("wl_kind", ("skewed", "moe"))
+def test_compiled_matches_interpreted(algo, topo_kind, wl_kind):
+    """The acceptance bar: <= 1e-12 parity for every registered scheduler
+    on heterogeneous fabrics under skewed traffic."""
+    topo = _topology(topo_kind)
+    w = _workload(topo, wl_kind)
+    plan = get_scheduler(algo).synthesize(w)
+    _assert_parity(plan, w)
+
+
+def test_compiled_matches_interpreted_blind_on_degraded_fabric():
+    """Topology-override execution (the fig_hetero blindness experiment),
+    including the infinite-completion failed-NIC case."""
+    for kind in ("degraded_nic", "failed_nic", "oversubscribed"):
+        topo = _topology(kind)
+        w = random_workload(topo, 4 << 20, seed=0)
+        w_homo = random_workload(_homo(), 4 << 20, seed=0)
+        blind = get_scheduler("flash").synthesize(w_homo)
+        ref, got = _assert_parity(blind, w, topology=topo)
+        if kind == "failed_nic":
+            assert np.isinf(ref.completion_time)
+            assert np.isinf(got.completion_time)
+
+
+def test_compiled_matches_interpreted_padding_only_stage():
+    """A stage whose matched entries were all padding (perm all -1) takes
+    the legacy cluster-min redistribute fallback in both paths."""
+    topo = _homo()
+    w = random_workload(topo, 1 << 20, seed=3)
+    size = 4.0e6
+    phases = (
+        PermutationStage(perm=(-1, -1, -1, -1), size=size,
+                         sent=(0.0,) * 4),
+        PermutationStage(perm=(1, 0, 3, 2), size=size,
+                         sent=(size,) * 4),
+        RedistributePhase(bytes_per_gpu=size / 4, charge_alpha=True),
+    )
+    plan = Plan(algorithm="flash", cluster=topo.cluster_view(),
+                phases=phases, accounts_intra=False, topology=topo)
+    _assert_parity(plan, w)
+
+
+def test_compiled_matches_interpreted_zero_traffic():
+    """An all-zero workload produces all-zero barrier stages: neither path
+    may invent a breakdown key for them (key-set parity)."""
+    c = ClusterSpec(2, 4)
+    w = Workload(c, np.zeros((c.n_gpus, c.n_gpus)))
+    for algo in available_schedulers():
+        plan = get_scheduler(algo).synthesize(w)
+        ref, got = _assert_parity(plan, w)
+        assert ref.completion_time == got.completion_time
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_compiled_parity_seeded(seed):
+    """Seeded fallback for the property test below: random shapes,
+    scenarios and schedulers, always run."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 6))
+    m = int(rng.integers(2, 5))
+    topo = _topology(TOPO_KINDS[int(rng.integers(len(TOPO_KINDS)))], n, m)
+    w = _workload(topo, ("skewed", "random", "moe")[seed % 3],
+                  seed=int(rng.integers(10_000)))
+    for algo in available_schedulers():
+        plan = get_scheduler(algo).synthesize(w)
+        _assert_parity(plan, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(0, 10_000),
+       st.sampled_from(TOPO_KINDS),
+       st.sampled_from(("skewed", "random", "moe")))
+def test_compiled_parity_property(n, m, seed, topo_kind, wl_kind):
+    topo = _topology(topo_kind, n, m)
+    w = _workload(topo, wl_kind, seed=seed)
+    for algo in available_schedulers():
+        plan = get_scheduler(algo).synthesize(w)
+        _assert_parity(plan, w)
+
+
+# -- batched execution -----------------------------------------------------
+
+
+def _drift_trajectory(topo, steps=6, seed=0):
+    """A drifting-MoE trajectory: small multiplicative perturbations of a
+    base gating matrix, with one exact repeat."""
+    rng = np.random.default_rng(seed)
+    base = moe_workload(topo, 4096, 2048, top_k=2, seed=seed)
+    mats = [base.matrix]
+    for _ in range(steps - 2):
+        nxt = mats[-1].copy()
+        drift = rng.random(nxt.shape) < 0.05
+        nxt[drift] *= rng.uniform(0.8, 1.2, size=int(drift.sum()))
+        np.fill_diagonal(nxt, 0.0)
+        mats.append(nxt)
+    mats.append(mats[0])  # repeated signature -> exact cache hit
+    return [Workload(base.cluster, mat, base.topology) for mat in mats]
+
+
+def test_execute_batch_matches_loop_of_execute_plan():
+    topo = _topology("mixed_speeds")
+    traj = _drift_trajectory(topo)
+    plan = get_scheduler("flash").synthesize(traj[0])
+    sched = plan.compile()
+    want = [execute_plan(plan, w) for w in traj]
+    # All three traffic forms: (B, N, N) stack, workloads, raw matrices.
+    stack = np.stack([w.matrix for w in traj])
+    for batch in (sched.execute_batch(stack), sched.execute_batch(traj),
+                  sched.execute_batch([w.matrix for w in traj])):
+        assert len(batch) == len(want)
+        for got, ref in zip(batch, want):
+            assert got.completion_time == ref.completion_time
+            assert got.algbw == ref.algbw
+            assert got.memory_bytes == ref.memory_bytes
+            assert got.breakdown == ref.breakdown
+
+
+def test_execute_batch_rejects_wrong_shapes():
+    topo = _homo()
+    w = random_workload(topo, 1 << 20, seed=0)
+    sched = get_scheduler("flash").synthesize(w).compile()
+    with pytest.raises(ValueError, match="traffic stack shape"):
+        sched.execute_batch(np.zeros((2, 3, 3)))
+    with pytest.raises(ValueError, match="traffic matrix shape"):
+        sched.execute_batch([np.zeros((3, 3))])
+    # A workload whose *cluster* shape mismatches is rejected even when
+    # its GPU count (and so its matrix shape) coincides with the plan's.
+    w_other = random_workload(_homo(2, 8), 1 << 20, seed=0)
+    assert w_other.cluster.n_gpus == w.cluster.n_gpus
+    with pytest.raises(ValueError, match="workload shape"):
+        sched.execute_batch([w_other])
+
+
+def test_simulate_many_matches_loop_of_simulate():
+    """The batched front door is result-for-result the serving loop,
+    including PlanCache hit/warm counters."""
+    topo = _homo()
+    traj = _drift_trajectory(topo, steps=7, seed=1)
+    cache_a = PlanCache(warm_start=True)
+    cache_b = PlanCache(warm_start=True)
+    got = simulate_many(traj, "flash", cache=cache_a)
+    want = [simulate(w, "flash", cache=cache_b) for w in traj]
+    assert len(got) == len(want)
+    for g, r in zip(got, want):
+        assert g.completion_time == r.completion_time
+        assert g.algbw == r.algbw
+        assert g.breakdown == r.breakdown
+    assert (cache_a.hits, cache_a.misses, cache_a.warm_hits) == \
+        (cache_b.hits, cache_b.misses, cache_b.warm_hits)
+    assert cache_a.hits >= 1  # the trajectory's exact repeat
+
+
+def test_simulate_many_with_held_plan_and_override_topology():
+    """One stale plan held across a trajectory (drift experiment) on an
+    override fabric: equals the loop, batched through one schedule."""
+    topo = _topology("degraded_nic")
+    traj = _drift_trajectory(topo, steps=5, seed=2)
+    w_homo = random_workload(_homo(), 4 << 20, seed=0)
+    blind = get_scheduler("flash").synthesize(w_homo)
+    got = simulate_many(traj, "flash", plan=blind, topology=topo)
+    want = [simulate(w, "flash", plan=blind, topology=topo) for w in traj]
+    for g, r in zip(got, want):
+        assert g.completion_time == r.completion_time
+        assert g.algbw == r.algbw
+
+
+# -- the compiled-schedule cache slot --------------------------------------
+
+
+def test_plan_compile_is_memoized_per_topology():
+    topo = _homo()
+    w = random_workload(topo, 1 << 20, seed=0)
+    plan = get_scheduler("flash").synthesize(w)
+    s1 = plan.compile()
+    assert plan.compile() is s1  # same fingerprint -> same schedule
+    other = _topology("degraded_nic")
+    s2 = plan.compile(other)
+    assert s2 is not s1  # new fabric -> recompiled
+    assert plan.compile(other) is s2
+    assert plan.compile() is s1  # both slots live side by side
+    # compile_plan itself never memoizes (always-fresh building block).
+    assert compile_plan(plan) is not s1
+
+
+def test_compiled_result_breakdown_is_private_copy():
+    topo = _homo()
+    w = random_workload(topo, 1 << 20, seed=0)
+    plan = get_scheduler("flash").synthesize(w)
+    r1 = execute_plan(plan, w)
+    r1.breakdown["inter"] = -1.0  # caller mutates its result...
+    r2 = execute_plan(plan, w)
+    assert r2.breakdown["inter"] > 0  # ...the compiled schedule is intact
+
+
+def test_execute_rejects_mismatched_workload_shape():
+    w4 = random_workload(_homo(4, 4), 1 << 20, seed=0)
+    w2 = random_workload(_homo(2, 4), 1 << 20, seed=0)
+    sched = get_scheduler("flash").synthesize(w4).compile()
+    with pytest.raises(ValueError, match="workload shape"):
+        sched.execute(w2)
+
+
+# -- satellite regressions -------------------------------------------------
+
+
+def test_simulate_seeds_cache_with_provided_plan():
+    """Regression: ``simulate(w, algo, plan=..., cache=...)`` used to
+    ignore the cache entirely; it now inserts the plan under its own
+    traffic fingerprint so later replays hit."""
+    cache = PlanCache()
+    c = ClusterSpec(4, 4)
+    w = moe_workload(c, 4096, 2048, top_k=2, seed=5)
+    plan = get_scheduler("flash").synthesize(w)
+    simulate(w, "flash", plan=plan, cache=cache)
+    assert len(cache) == 1
+    assert (cache.hits, cache.misses) == (0, 0)  # insert, not lookup
+    r = simulate(w, "flash", cache=cache)
+    assert (cache.hits, cache.misses) == (1, 0)  # later hits now fire
+    assert r.completion_time == execute_plan(plan, w).completion_time
+    assert cache.lookup(traffic_fingerprint(w, "flash")) is plan
+
+
+def test_simulate_plan_insertion_does_not_poison_drift_experiments():
+    """A stale plan deliberately executed against *new* traffic must be
+    cached under the traffic it was synthesized for -- never under the
+    drifted workload's fingerprint."""
+    cache = PlanCache()
+    c = ClusterSpec(4, 4)
+    w0 = moe_workload(c, 4096, 2048, top_k=2, seed=0)
+    w1 = moe_workload(c, 4096, 2048, top_k=2, seed=1)
+    plan0 = get_scheduler("flash").synthesize(w0)
+    simulate(w1, "flash", plan=plan0, cache=cache)  # drift execution
+    # w1's own fingerprint must still miss (fresh synthesis)...
+    assert cache.lookup(traffic_fingerprint(w1, "flash")) is None
+    # ...while w0's traffic now hits plan0.
+    assert cache.lookup(traffic_fingerprint(w0, "flash")) is plan0
+
+
+def test_uniform_shares_memoized_and_frozen():
+    """Regression: the executor allocated a fresh uniform (n, n, m) share
+    array on every call for plans without explicit ``nic_shares``."""
+    s1 = uniform_nic_shares(4, 8)
+    assert uniform_nic_shares(4, 8) is s1
+    assert not s1.flags.writeable
+    np.testing.assert_allclose(s1, 1.0 / 8)
+    assert uniform_nic_shares(4, 4) is not s1
+
+
+def test_permutation_stage_live_is_memoized():
+    """Regression: ``live_slots`` was recomputed up to three times per
+    stage per execution (transfer, hidden redistribute, tail)."""
+    stage = PermutationStage(perm=(1, 0, -1, 3), size=8.0,
+                             sent=(8.0, 8.0, 0.0, 4.0))
+    live = stage.live()
+    assert stage.live() is live
+    src, dst, slot = live
+    ref_src, ref_dst, ref_slot = live_slots(stage.perm, stage.slots,
+                                            stage.size)
+    np.testing.assert_array_equal(src, ref_src)
+    np.testing.assert_array_equal(dst, ref_dst)
+    np.testing.assert_array_equal(slot, ref_slot)
+    assert not src.flags.writeable
+
+
+def test_simulate_reference_path_still_available():
+    """The interpreted oracle stays reachable through the public
+    pipeline, like ``birkhoff_decompose(reference=True)``."""
+    w = random_workload(_homo(), 4 << 20, seed=9)
+    r_ref = simulate(w, "spreadout", reference=True)
+    r = simulate(w, "spreadout")
+    assert _rel(r_ref.completion_time, r.completion_time) <= PARITY_RTOL

@@ -27,6 +27,16 @@ regressions in the guarded series.  Three kinds of budget:
     bar: compiled re-execution of a cached plan must stay >= 10x faster
     than the interpreted oracle (observed ~1000x).
 
+  * **Serving guards** (``SERVE_*``): the ``serve.*`` rows (fig_serving)
+    guard the plan-serving daemon under closed-loop concurrent load.
+    The issue-6 acceptance bar: p50 plan-request latency within 10x of
+    compiled execution of a cached plan (observed ~4x), a cache hit-rate
+    floor of 0.5 on the repeat-heavy trajectory (observed ~0.94), at
+    least one background upgrade applied, plan-for-plan parity between
+    post-drain served plans and from-scratch synthesis, and a generous
+    absolute p99 ceiling (a whole synthesis in the tail is expected; a
+    deadlocked or serialized daemon is not).
+
 Usage:  python -m benchmarks.check_synth_budget BENCH_ci.json
 """
 
@@ -61,6 +71,12 @@ EXEC_REGRESSION_FACTOR = 1.5
 EXEC_SPEEDUP_FLOORS = {
     "exec.cached32": 10.0,  # issue-5 acceptance bar; observed ~1000x
 }
+
+# Plan-serving daemon (fig_serving) acceptance bars.
+SERVE_P50_MAX_RATIO = 10.0    # issue-6 bar: p50 / exec_us; observed ~4x
+SERVE_P99_CEILING_US = 500_000.0  # tail = one synthesis; observed ~15ms
+SERVE_HIT_RATE_FLOOR = 0.5    # repeat-heavy trajectory; observed ~0.94
+SERVE_UPGRADES_FLOOR = 1      # background upgrades must actually land
 
 
 def check(path: str) -> int:
@@ -132,6 +148,69 @@ def check(path: str) -> int:
         else:
             print(f"ok   {name}: compiled/interpreted = {ratio:.0f}x "
                   f">= {floor:.0f}x")
+    status |= _check_serving(records)
+    return status
+
+
+def _check_serving(records) -> int:
+    """The fig_serving rows: daemon latency, hit rate, upgrades, parity."""
+    status = 0
+    p50 = records.get("serve.p50")
+    ratio = (p50 or {}).get("derived", {}).get("ratio", "").rstrip("x")
+    if p50 is None or not ratio:
+        print("FAIL serve.p50: missing (benchmark renamed or skipped?)")
+        status = 1
+    elif float(ratio) > SERVE_P50_MAX_RATIO:
+        print(f"FAIL serve.p50: {float(ratio):.2f}x compiled execution "
+              f"(> {SERVE_P50_MAX_RATIO:.0f}x budget)")
+        status = 1
+    else:
+        print(f"ok   serve.p50: {float(ratio):.2f}x compiled execution "
+              f"<= {SERVE_P50_MAX_RATIO:.0f}x")
+    p99 = records.get("serve.p99")
+    if p99 is None:
+        print("FAIL serve.p99: missing (benchmark renamed or skipped?)")
+        status = 1
+    elif float(p99["us_per_call"]) > SERVE_P99_CEILING_US:
+        print(f"FAIL serve.p99: {float(p99['us_per_call']) / 1e3:.1f}ms "
+              f"exceeds the {SERVE_P99_CEILING_US / 1e3:.0f}ms ceiling")
+        status = 1
+    else:
+        print(f"ok   serve.p99: {float(p99['us_per_call']) / 1e3:.1f}ms "
+              f"<= {SERVE_P99_CEILING_US / 1e3:.0f}ms")
+    hit = records.get("serve.hit_rate")
+    if hit is None:
+        print("FAIL serve.hit_rate: missing (benchmark renamed or "
+              "skipped?)")
+        status = 1
+    elif float(hit["us_per_call"]) < SERVE_HIT_RATE_FLOOR:
+        print(f"FAIL serve.hit_rate: {float(hit['us_per_call']):.2f} "
+              f"below the {SERVE_HIT_RATE_FLOOR:.2f} floor")
+        status = 1
+    else:
+        print(f"ok   serve.hit_rate: {float(hit['us_per_call']):.2f} "
+              f">= {SERVE_HIT_RATE_FLOOR:.2f}")
+    up = records.get("serve.upgrades")
+    parity = (up or {}).get("derived", {}).get("parity")
+    if up is None:
+        print("FAIL serve.upgrades: missing (benchmark renamed or "
+              "skipped?)")
+        status = 1
+    else:
+        if float(up["us_per_call"]) < SERVE_UPGRADES_FLOOR:
+            print(f"FAIL serve.upgrades: {up['us_per_call']} background "
+                  f"upgrades (< {SERVE_UPGRADES_FLOOR} floor)")
+            status = 1
+        else:
+            print(f"ok   serve.upgrades: {float(up['us_per_call']):.0f} "
+                  f">= {SERVE_UPGRADES_FLOOR}")
+        if parity != "ok":
+            print(f"FAIL serve.upgrades: post-drain plan parity is "
+                  f"{parity!r} (served plans must match from-scratch "
+                  "synthesis)")
+            status = 1
+        else:
+            print("ok   serve.upgrades: post-drain plan parity holds")
     return status
 
 

@@ -11,6 +11,7 @@ so successive runs accumulate a perf trajectory.  Modules:
   fig17  scheduler synthesis time + memory overhead slope
   hetero heterogeneous fabrics: degraded/failed/mixed NICs, oversubscription
   dynamic  drifting-MoE serving loop: cache + warm start + compiled executor
+  serving  closed-loop concurrent load on the plan-serving daemon
   roofline  per-(arch x shape x mesh) terms from the dry-run sweep
 """
 
@@ -27,6 +28,7 @@ from . import (
     fig17_overhead,
     fig_dynamic,
     fig_hetero,
+    fig_serving,
     roofline_table,
 )
 from .common import Csv
@@ -34,7 +36,7 @@ from .common import Csv
 
 MODULES = (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
            fig16_topo, fig17_overhead, fig_hetero, fig_dynamic,
-           roofline_table)
+           fig_serving, roofline_table)
 
 
 def main(argv=None) -> None:

@@ -69,6 +69,13 @@ def main():
           f"{cache.hits - hits0} hits / {cache.misses - misses0} misses, "
           f"mean AlgoBW {sum(r.algbw for r in results) / len(results) / 1e9:.2f} GB/s")
 
+    # To share one scheduler (and its cache) across *concurrent* jobs,
+    # run it as a daemon instead -- see examples/plan_server_demo.py and
+    # DESIGN.md section 2 (PlanServer / PlanClient, warm repair with
+    # background upgrades, drift prewarming, telemetry).
+    print("\nnext: examples/plan_server_demo.py -- the plan-serving "
+          "daemon (repro.serving)")
+
 
 if __name__ == "__main__":
     main()

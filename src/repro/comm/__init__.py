@@ -2,7 +2,7 @@
 
 Implementation selection goes through one registry
 (``register_all_to_all_impl`` / ``resolve_all_to_all``) shared by model
-code, ``launch/`` and the benchmarks; see DESIGN.md section 3.
+code, ``launch/`` and the benchmarks; see DESIGN.md section 4.
 """
 
 from .all_to_all import (

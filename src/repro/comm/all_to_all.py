@@ -12,7 +12,7 @@ for ``x`` of shape ``[n_shards, ...]`` with the combined shard index ordered
 slow-axis-major -- i.e. all variants are bit-identical to
 ``direct_all_to_all`` and interchangeable under a config flag.
 
-TPU adaptation of the paper (see DESIGN.md section 2): XLA compiles a static
+TPU adaptation of the paper (see DESIGN.md section 3): XLA compiles a static
 communication pattern, so the jit-integrated FLASH schedule is the
 Birkhoff decomposition of the *balanced* post-load-balance matrix -- the
 P-1 cyclic rotations sigma_k(p) = (p+k) mod P, each lowered to one

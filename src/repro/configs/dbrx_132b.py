@@ -2,7 +2,7 @@
 
 EP mapping: 16 experts shard exactly over the ``data``(16) axis -> the
 dispatch All-to-All stays on intra-pod ICI (FLASH degenerates to its
-merged-transfer step only; see DESIGN.md section 5).
+merged-transfer step only; see DESIGN.md section 3).
 """
 
 from .registry import ModelConfig, MoESpec, register

@@ -1,7 +1,7 @@
 """mixtral-8x7b [moe]: 8 experts top-2, SWA [arXiv:2401.04088].
 
 EP mapping: 8 experts over ``pod``(2) x part of ICI -> dispatch/combine
-cross DCN; this is the paper-representative FLASH cell (DESIGN.md section 5).
+cross DCN; this is the paper-representative FLASH cell (DESIGN.md section 3).
 Sliding-window attention (w=4096) makes ``long_500k`` applicable.
 """
 

@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Any, ClassVar, Dict, Optional, Tuple
 
@@ -656,14 +657,31 @@ def traffic_fingerprint(w: Workload, algorithm: str = "") -> str:
     covers the cluster shape, every per-server fabric, every NIC capacity
     and the oversubscription factor) is part of the key, so the same matrix
     replayed on a different fabric always misses.
+
+    Memoized per (Workload instance, algorithm): Workload is frozen and
+    its matrix is treated as immutable after construction (same contract
+    as the memoized ``Workload.topo``), and the content hash is the
+    dominant cost of a cache hit on the serving fast path -- replaying a
+    trajectory of Workload objects must not re-hash every matrix on every
+    visit.
     """
+    memo = w.__dict__.get("_traffic_fp")
+    if memo is not None:
+        fp = memo.get(algorithm)
+        if fp is not None:
+            return fp
     h = hashlib.blake2b(digest_size=16)
     mat = np.ascontiguousarray(w.matrix, dtype=np.float64)
     h.update(str(mat.shape).encode())
     h.update(mat.tobytes())
     h.update(w.topo.fingerprint().encode())
     h.update(algorithm.encode())
-    return h.hexdigest()
+    fp = h.hexdigest()
+    if memo is None:
+        memo = {}
+        object.__setattr__(w, "_traffic_fp", memo)
+    memo[algorithm] = fp
+    return fp
 
 
 class PlanCache:
@@ -691,6 +709,16 @@ class PlanCache:
     topology's fingerprint, so a cache hit hands back a plan whose
     compiled schedule is already attached -- the serving loop skips
     synthesis and compilation and pays only the O(1) compiled execute.
+
+    The cache is safe under concurrent access (the plan-serving daemon in
+    ``repro.serving`` shares one instance across worker and client
+    threads): one lock guards the LRU store, the family index and the
+    counters, ``stats()`` returns an atomic snapshot of the counters (the
+    bare attributes remain readable for back-compat but can tear across a
+    multi-field read), and ``get_or_synthesize`` never holds the lock
+    during synthesis -- two threads racing the same fingerprint may both
+    synthesize, but the insert re-check keeps one canonical Plan per key
+    so every caller gets the same object.
     """
 
     def __init__(self, capacity: int = 256, warm_start: bool = False):
@@ -698,6 +726,7 @@ class PlanCache:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.warm_start = warm_start
+        self._lock = threading.RLock()
         self._store: "OrderedDict[str, Plan]" = OrderedDict()
         self._family: Dict[str, str] = {}  # family key -> latest exact key
         self._key_family: Dict[str, str] = {}  # exact key -> its family
@@ -707,32 +736,89 @@ class PlanCache:
         self.warm_hits = 0
 
     def __len__(self) -> int:
-        return len(self._store)
+        with self._lock:
+            return len(self._store)
 
     @property
     def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+        with self._lock:
+            total = self.hits + self.misses
+            return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        """Atomic snapshot of the counters.
+
+        Reading ``hits`` / ``misses`` / ``hit_rate`` as separate attribute
+        accesses can tear mid-update under concurrent serving (a lookup
+        between the two reads skews the ratio); this returns all of them
+        from one critical section."""
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "warm_hits": self.warm_hits,
+                "size": len(self._store),
+                "capacity": self.capacity,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
 
     def clear(self) -> None:
-        self._store.clear()
-        self._family.clear()
-        self._key_family.clear()
-        self._family_count.clear()
-        self.hits = 0
-        self.misses = 0
-        self.warm_hits = 0
+        with self._lock:
+            self._store.clear()
+            self._family.clear()
+            self._key_family.clear()
+            self._family_count.clear()
+            self.hits = 0
+            self.misses = 0
+            self.warm_hits = 0
 
     def lookup(self, key: str) -> Optional[Plan]:
-        plan = self._store.get(key)
-        if plan is not None:
-            self._store.move_to_end(key)
-            self.hits += 1
-        else:
-            self.misses += 1
-        return plan
+        with self._lock:
+            plan = self._store.get(key)
+            if plan is not None:
+                self._store.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            return plan
+
+    def peek(self, key: str) -> Optional[Plan]:
+        """Counter-free, order-preserving lookup.
+
+        The serving daemon's workers re-check the store after a client's
+        fast-path miss already counted; a second ``lookup`` would double
+        count and perturb the LRU order for what is one logical request.
+        """
+        with self._lock:
+            return self._store.get(key)
+
+    def peek_family(self, family: str) -> Optional[Plan]:
+        """The most recent cached plan of a (cluster, topology, algorithm)
+        family (see ``cluster_family_key``), without touching counters --
+        the warm-repair seed for the serving daemon's near-miss path."""
+        with self._lock:
+            key = self._family.get(family)
+            return self._store.get(key) if key is not None else None
+
+    def evict(self, key: str) -> bool:
+        """Drop one entry (and its family-index membership) by exact key.
+
+        Returns whether the key was present.  TTL/staleness policies
+        layered on top of the LRU (serving/policy.py) use this to expire
+        entries the LRU order alone would keep alive."""
+        with self._lock:
+            plan = self._store.pop(key, None)
+            if plan is None:
+                return False
+            self._drop_family_member(key, self._key_family.pop(key))
+            return True
 
     def insert(self, key: str, plan: Plan) -> None:
+        with self._lock:
+            self._insert_locked(key, plan)
+
+    def _insert_locked(self, key: str, plan: Plan) -> None:
         family = plan_family_key(plan)
         old_family = self._key_family.get(key)
         if old_family is not None and old_family != family:
@@ -779,14 +865,27 @@ class PlanCache:
 
         On an exact miss with ``warm_start`` enabled, a same-family cached
         plan seeds ``scheduler.repair_plan`` instead of a cold synthesis.
+
+        Thread-safe, and synthesis runs *outside* the lock: concurrent
+        misses on the same fingerprint may each synthesize, but the insert
+        re-check below keeps the first inserted Plan canonical -- later
+        racers return it instead of overwriting, so repeated lookups of
+        one fingerprint always yield one object (and its memoized
+        compiled schedule).
         """
         key = traffic_fingerprint(w, scheduler.name)
-        plan = self.lookup(key)
-        if plan is None:
-            family = cluster_family_key(w, scheduler.name)
+        with self._lock:
+            plan = self._store.get(key)
+            if plan is not None:
+                self._store.move_to_end(key)
+                self.hits += 1
+                return plan
+            self.misses += 1
             prev = None
             if self.warm_start and hasattr(scheduler, "try_repair_plan"):
-                prev = self._store.get(self._family.get(family, ""))
+                prev = self._store.get(
+                    self._family.get(cluster_family_key(w, scheduler.name),
+                                     ""))
                 # The family key pins (cluster, topology, algorithm), but a
                 # stale or hand-inserted entry must degrade to cold, never
                 # propagate a repair error out of a cache lookup.
@@ -794,13 +893,18 @@ class PlanCache:
                                          prev.topo.fingerprint()
                                          != w.topo.fingerprint()):
                     prev = None
-            if prev is not None:
-                plan = scheduler.try_repair_plan(prev, w, fingerprint=key)
-                if plan is not None:
-                    self.warm_hits += 1
-            else:
-                plan = None
-            if plan is None:
-                plan = scheduler.synthesize(w, fingerprint=key)
-            self.insert(key, plan)  # also repoints _family[family] to key
+        plan = None
+        if prev is not None:
+            plan = scheduler.try_repair_plan(prev, w, fingerprint=key)
+        warm = plan is not None
+        if plan is None:
+            plan = scheduler.synthesize(w, fingerprint=key)
+        with self._lock:
+            existing = self._store.get(key)
+            if existing is not None:  # lost the race: keep the canonical plan
+                self._store.move_to_end(key)
+                return existing
+            if warm:
+                self.warm_hits += 1
+            self._insert_locked(key, plan)  # repoints _family[family] to key
         return plan

@@ -35,6 +35,7 @@ from typing import ClassVar, Dict, List, Optional, Tuple, Type
 import numpy as np
 
 from .birkhoff import (
+    AUTO_EXACT_MAX_N,
     Stage,
     birkhoff_decompose,
     max_line_sum,
@@ -126,6 +127,24 @@ class Scheduler(abc.ABC):
         synth = time.perf_counter() - t0
         return self._build_plan(w, out, synth, fingerprint)
 
+    def synthesize_bounded(self, w: Workload, budget_seconds:
+                           Optional[float] = None,
+                           fingerprint: Optional[str] = None
+                           ) -> Tuple[Plan, bool]:
+        """Synthesize under a soft wall-clock budget: ``(plan, exact)``.
+
+        The serving daemon's cold path must answer *now*, not after the
+        best possible synthesis -- so a scheduler may trade plan quality
+        for latency when its predicted synthesis cost exceeds the budget,
+        returning ``exact=False`` to signal that a background upgrade to
+        the unbounded plan is worthwhile.  The base implementation has no
+        degraded mode (every baseline synthesizes in O(n) -- the budget
+        cannot bind), so it always returns the exact plan; FLASH overrides
+        this with the fast repair-engine decomposition.
+        """
+        del budget_seconds  # no degraded mode: the exact plan is the answer
+        return self.synthesize(w, fingerprint=fingerprint), True
+
     def _build_plan(self, w: Workload, out, synth: float,
                     fingerprint: Optional[str]) -> Plan:
         """Wrap a ``plan_phases``-shaped result into a Plan (shared by the
@@ -170,12 +189,52 @@ class FlashScheduler(Scheduler):
     capacity_aware: ClassVar[bool] = False
 
     def plan_phases(self, w: Workload):
+        return self._plan_phases(w, policy="auto")
+
+    def _plan_phases(self, w: Workload, policy: str):
         t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
         stages = birkhoff_decompose(
-            t_server, sort_ascending=True, coalesce=True,
+            t_server, sort_ascending=True, coalesce=True, policy=policy,
             topology=w.topo if self.capacity_aware else None,
             capacity_aware=self.capacity_aware)
         return self._phases_from_stages(w, t_server, s_intra, stages)
+
+    # Observed cold-synthesis seconds per (algorithm, n_servers), EWMA.
+    # Class-level so every scheduler instance (the serving daemon builds
+    # them on demand) shares one latency model; keys include the name so
+    # flash and flash_ca never mix.
+    _synth_ewma: ClassVar[Dict[Tuple[str, int], float]] = {}
+
+    def synthesize_bounded(self, w: Workload, budget_seconds:
+                           Optional[float] = None,
+                           fingerprint: Optional[str] = None
+                           ) -> Tuple[Plan, bool]:
+        """FLASH under a latency budget (see ``Scheduler.synthesize_bounded``).
+
+        The cost model is an EWMA of observed cold-synthesis times for
+        this (algorithm, n_servers); when the estimate exceeds the budget
+        the decomposition runs with ``policy="repair"`` -- the augmenting
+        path engine that is the fast mode beyond ``AUTO_EXACT_MAX_N``
+        servers -- instead of the default auto policy.  Below that size
+        the repair engine produces a valid but generally different (and
+        slightly longer) stage list than the exact engine, so the plan is
+        flagged inexact and the serving daemon schedules a background
+        upgrade; at or beyond it the repair engine *is* what unbounded
+        synthesis runs, so the degraded path is already exact.
+        """
+        key = (self.name, w.cluster.n_servers)
+        est = self._synth_ewma.get(key)
+        if budget_seconds is None or est is None or est <= budget_seconds:
+            plan = self.synthesize(w, fingerprint=fingerprint)
+            obs = plan.synth_seconds
+            self._synth_ewma[key] = obs if est is None \
+                else 0.7 * est + 0.3 * obs
+            return plan, True
+        t0 = time.perf_counter()
+        out = self._plan_phases(w, policy="repair")
+        plan = self._build_plan(w, out, time.perf_counter() - t0,
+                                fingerprint)
+        return plan, w.cluster.n_servers > AUTO_EXACT_MAX_N
 
     def _phases_from_stages(self, w: Workload, t_server: np.ndarray,
                             s_intra: np.ndarray, stages):

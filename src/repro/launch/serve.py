@@ -76,6 +76,51 @@ def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
 
 # -- CPU-scale batched-serving demo ------------------------------------------
 
+def _plan_dispatch_schedules(gen_len: int, use_plan_server: bool) -> None:
+    """Plan the MoE dispatch schedule each decode step would issue.
+
+    Models the testbed fabric (4 servers x 8 GPUs) and one drifting MoE
+    dispatch matrix per generated token.  With ``use_plan_server`` the
+    plan requests route through the serving daemon (``repro.serving``);
+    the default stays on the inline path -- ``simulate_many`` over a
+    process-local PlanCache -- so the two paths print side by side
+    comparable hit rates.
+    """
+    from ..core.plan import PlanCache
+    from ..core.simulator import simulate_many
+    from ..core.traffic import ClusterSpec, moe_workload
+
+    cluster = ClusterSpec(n_servers=4, m_gpus=8)
+    # Each decode step re-draws gating for the same token budget; every
+    # 4th step repeats a seed (hot signatures), the rest drift.
+    traj = [moe_workload(cluster, tokens_per_gpu=2048, bytes_per_token=2,
+                         seed=(step // 4 if step % 4 == 0 else step))
+            for step in range(gen_len)]
+    t0 = time.perf_counter()
+    if use_plan_server:
+        from ..serving import PlanClient, PlanServer
+
+        with PlanServer(workers=2) as srv:
+            client = PlanClient(srv, algorithm="flash")
+            results = client.simulate_many(traj)
+            srv.drain(10.0)
+            stats = srv.telemetry_snapshot()
+        counters = stats["counters"]
+        route = (f"plan-server: hits={counters.get('hits', 0)} "
+                 f"warm={counters.get('warm', 0)} "
+                 f"cold={counters.get('cold', 0)} "
+                 f"upgrades={counters.get('upgrades', 0)}")
+    else:
+        cache = PlanCache(capacity=256, warm_start=True)
+        results = simulate_many(traj, "flash", cache=cache)
+        route = (f"inline: hits={cache.hits} misses={cache.misses} "
+                 f"warm={cache.warm_hits}")
+    dt = time.perf_counter() - t0
+    mean_us = float(np.mean([r.completion_time for r in results])) * 1e6
+    print(f"dispatch planning [{route}] {len(traj)} steps in {dt:.3f}s; "
+          f"mean schedule completion {mean_us:.1f}us")
+
+
 def main():
     from ..comm.all_to_all import available_all_to_all_impls
 
@@ -90,6 +135,10 @@ def main():
                     help="MoE All-to-All schedule (registry name, or "
                          "'auto' to resolve from the fabric topology); "
                          "defaults to the arch config's a2a_impl")
+    ap.add_argument("--plan-server", action="store_true",
+                    help="route dispatch-schedule planning through the "
+                         "plan-serving daemon (repro.serving) instead of "
+                         "the inline PlanCache path")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -121,6 +170,7 @@ def main():
     print(f"arch={cfg.name} batch={args.batch} generated={gen.shape[1]} "
           f"tokens/req; {tput:.1f} tok/s total")
     print("sample:", gen[0][:16])
+    _plan_dispatch_schedules(args.gen_len, args.plan_server)
 
 
 if __name__ == "__main__":

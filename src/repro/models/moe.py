@@ -15,7 +15,7 @@ bounds every (source shard, expert) chunk at C tokens; overflow tokens are
 dropped (contribute zero), underflow is zero-padded.  This padding is what
 makes the *post-load-balance* traffic matrix uniform, which in turn is why
 the balanced Birkhoff schedule inside ``flash_all_to_all`` is exact (see
-DESIGN.md section 2).
+DESIGN.md section 3).
 
 The single-device path (``dist=None``) runs the same sort-dispatch math with
 G=1 and no collectives; it is the correctness oracle for the island.

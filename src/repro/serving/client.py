@@ -1,0 +1,85 @@
+"""Client-side adapter for the plan-serving daemon.
+
+``PlanClient`` is the piece launch scripts and training loops hold: it
+pins the request policy (algorithm, tier, timeout) once, then exposes the
+same verbs as the inline path -- ``get_plan``, ``simulate``,
+``simulate_many`` -- so routing a job through the daemon is a one-line
+swap.  When the daemon cannot answer (queue saturated, request shed or
+timed out, server stopped), the client falls back to inline synthesis by
+default: the daemon is an accelerator, never a new single point of
+failure.  Fallback answers are tagged ``source="inline"`` and tallied in
+the client's own counters.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from ..core.plan import traffic_fingerprint
+from ..core.schedulers import get_scheduler
+from ..core.simulator import SimResult, execute_plan
+from ..core.traffic import Workload
+from .queue import AdmissionError, ServerClosed, Tier
+from .server import PlanAnswer, PlanServer
+
+__all__ = ["PlanClient"]
+
+
+class PlanClient:
+    """One job's handle on a shared ``PlanServer``.
+
+    Args:
+      server: the daemon to route plan requests through.
+      algorithm: scheduler registry name used for every request.
+      tier: queue priority for this client's requests.
+      timeout: seconds to wait for an answer before falling back.
+      inline_fallback: when False, daemon failures raise instead of
+        silently synthesizing locally (benchmarks that must measure only
+        the daemon set this).
+    """
+
+    def __init__(self, server: PlanServer, *, algorithm: str = "flash",
+                 tier: Tier = Tier.INTERACTIVE,
+                 timeout: Optional[float] = 60.0,
+                 inline_fallback: bool = True):
+        self.server = server
+        self.algorithm = algorithm
+        self.tier = tier
+        self.timeout = timeout
+        self.inline_fallback = inline_fallback
+        self.counters: Dict[str, int] = {
+            "requests": 0, "hit": 0, "warm": 0, "cold": 0, "inline": 0}
+
+    def get_plan(self, w: Workload) -> PlanAnswer:
+        """A served plan for ``w`` -- from the daemon, or inline fallback."""
+        self.counters["requests"] += 1
+        try:
+            answer = self.server.request(w, self.algorithm, self.tier,
+                                         timeout=self.timeout)
+        except (AdmissionError, ServerClosed, TimeoutError):
+            if not self.inline_fallback:
+                raise
+            answer = self._inline(w)
+        self.counters[answer.source] = self.counters.get(answer.source,
+                                                         0) + 1
+        return answer
+
+    def _inline(self, w: Workload) -> PlanAnswer:
+        t0 = time.perf_counter()
+        scheduler = get_scheduler(self.algorithm)
+        key = traffic_fingerprint(w, self.algorithm)
+        plan = scheduler.synthesize(w, fingerprint=key)
+        plan.compile()
+        return PlanAnswer(plan=plan, source="inline", exact=True,
+                          latency_s=time.perf_counter() - t0,
+                          request_id=-1, tier=self.tier)
+
+    def simulate(self, w: Workload) -> SimResult:
+        """Inline-path-compatible simulate: plan via the daemon, then
+        execute the workload against it."""
+        return execute_plan(self.get_plan(w).plan, w)
+
+    def simulate_many(self, workloads: Sequence[Workload]
+                      ) -> List[SimResult]:
+        return [self.simulate(w) for w in workloads]

@@ -1,0 +1,437 @@
+"""The plan-serving daemon: FLASH synthesis as a long-running service.
+
+Every entry point into the scheduler used to be a one-shot function call;
+``PlanServer`` turns it into a shared, concurrent service that owns one
+warm-start ``PlanCache`` and amortizes synthesis across every MoE job
+(serving replicas, training steps, benchmarks) that asks for a plan.
+
+The request path is split so the common case never waits on a queue:
+
+  * **Synchronous fast path** (caller's thread): fingerprint the traffic,
+    look it up in the cache.  A live (non-TTL-expired) hit resolves the
+    ticket immediately with the cached plan -- whose compiled
+    ``ExecutableSchedule`` is already attached, because workers compile
+    before inserting -- so a hit costs one hash plus one locked dict
+    probe, microseconds next to any synthesis.
+  * **Tiered queue + worker pool** (misses): workers drain the
+    ``TieredQueue`` in priority order.  Requests for a fingerprint
+    already being synthesized coalesce onto the in-flight computation
+    (no thundering herd).  A miss is answered by the *best available*
+    route: family near-miss -> ``try_repair_plan`` warm repair; cold ->
+    ``synthesize_bounded`` under the server's latency budget.  Both
+    degraded routes answer immediately and schedule a BACKGROUND
+    **upgrade** job that re-synthesizes the exact plan and swaps it into
+    the cache -- later hits serve the exact plan, and ``upgrades`` in the
+    telemetry tallies every swap.
+  * **Prewarming**: the ``DriftPredictor`` extrapolates each family's
+    traffic trajectory one step ahead; predicted fingerprints are
+    synthesized at BACKGROUND priority before any client requests them.
+
+Lifecycle: ``start()``/``stop()`` or use as a context manager;
+``drain()`` waits for the queue and background work to settle (tests and
+benchmarks use it to observe the post-upgrade steady state);
+``telemetry_snapshot()`` exports the full JSON metrics view (telemetry +
+cache stats + queue depths).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Union
+
+from ..core.plan import (
+    Plan,
+    PlanCache,
+    cluster_family_key,
+    traffic_fingerprint,
+)
+from ..core.schedulers import Scheduler, get_scheduler
+from ..core.traffic import Workload
+from .policy import DriftPredictor, TTLPolicy
+from .queue import (
+    AdmissionError,
+    PlanRequest,
+    PlanTicket,
+    ServerClosed,
+    TieredQueue,
+    Tier,
+)
+from .telemetry import Telemetry
+
+__all__ = ["PlanAnswer", "PlanServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanAnswer:
+    """One served plan plus its provenance.
+
+    ``source`` is the route that produced the answer: ``"hit"`` (cache,
+    including coalesced waiters), ``"warm"`` (repaired from a same-family
+    plan), ``"cold"`` (synthesized now).  ``exact`` is False while the
+    plan is a degraded answer (warm repair or over-budget bounded
+    synthesis) awaiting its background upgrade.
+    """
+
+    plan: Plan
+    source: str
+    exact: bool
+    latency_s: float
+    request_id: int
+    tier: Tier
+
+
+class PlanServer:
+    """Long-running, concurrent plan-serving daemon (module docstring).
+
+    Args:
+      cache: the PlanCache to own; default ``PlanCache(capacity=1024,
+        warm_start=True)``.  Warm start matters: it is what turns family
+        near-misses into repairs instead of cold syntheses.
+      workers: queue-draining threads.  They serve interactive misses and,
+        when idle, the BACKGROUND upgrade/prewarm tier.
+      queue: the TieredQueue (constructed with the server's shed hook when
+        omitted).
+      ttl: entry lifetime -- seconds, a ``TTLPolicy``, or None (never
+        expire).  Expired hits are served as misses and evicted.
+      prewarm: predict-ahead synthesis of each family's next fingerprint.
+      synth_budget_seconds: per-request synthesis latency budget handed to
+        ``Scheduler.synthesize_bounded`` on the cold path; None = no
+        budget (always exact).
+      telemetry: shared Telemetry instance (constructed when omitted).
+    """
+
+    def __init__(self, cache: Optional[PlanCache] = None, *,
+                 workers: int = 2,
+                 queue: Optional[TieredQueue] = None,
+                 ttl: Union[None, float, TTLPolicy] = None,
+                 prewarm: bool = True,
+                 synth_budget_seconds: Optional[float] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 predictor: Optional[DriftPredictor] = None):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.cache = cache if cache is not None else PlanCache(
+            capacity=1024, warm_start=True)
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.queue = queue if queue is not None else TieredQueue()
+        if self.queue._on_shed is None:
+            self.queue._on_shed = self._on_shed
+        self.ttl = (ttl if isinstance(ttl, TTLPolicy)
+                    else TTLPolicy(ttl_seconds=ttl))
+        self.prewarm = prewarm
+        self.synth_budget_seconds = synth_budget_seconds
+        self.predictor = (predictor if predictor is not None
+                          else DriftPredictor())
+        self._n_workers = workers
+        self._threads: List[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._inflight: Dict[str, List[PlanRequest]] = {}
+        self._background_keys: set = set()  # queued upgrade/prewarm keys
+        self._inexact: set = set()          # cached keys awaiting upgrade
+        self._prewarmed: Dict[str, None] = {}  # keys inserted by prewarm
+        self._busy = 0  # requests popped from the queue, not yet finished
+        self._running = False
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "PlanServer":
+        with self._lock:
+            if self._running:
+                return self
+            if self._closed:
+                raise ServerClosed("server was stopped; build a new one")
+            self._running = True
+        for i in range(self._n_workers):
+            t = threading.Thread(target=self._worker_loop,
+                                 name=f"plan-server-{i}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self.queue.close()  # fails queued tickets, wakes idle workers
+        for t in self._threads:
+            t.join(timeout)
+        self._threads.clear()
+        with self._lock:
+            self._running = False
+
+    def __enter__(self) -> "PlanServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until no queued, in-flight or background work remains.
+
+        Returns False on timeout.  Used to observe the settled state --
+        every pending upgrade applied, every prewarm inserted."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                busy = (self._busy > 0 or bool(self._inflight)
+                        or bool(self._background_keys))
+            if not busy and self.queue.depth() == 0:
+                return True
+            time.sleep(0.002)
+        return False
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, w: Workload, algorithm: str = "flash",
+               tier: Tier = Tier.INTERACTIVE) -> PlanTicket:
+        """Request a plan; returns a ticket (resolved already on a hit)."""
+        if self._closed or not self._running:
+            raise ServerClosed(
+                "PlanServer is not running (use `with PlanServer(...)`"
+                " or call start())")
+        t_start = time.perf_counter()
+        self.telemetry.count("requests")
+        self.predictor.observe(w, algorithm)
+        key = traffic_fingerprint(w, algorithm)
+        ticket = PlanTicket()
+        plan = self._lookup_live(key, counted=True)
+        if plan is not None:
+            self._resolve_hit(ticket, plan, key, t_start, tier, w, algorithm)
+            return ticket
+        req = PlanRequest(workload=w, algorithm=algorithm, tier=tier,
+                          kind="plan", key=key, ticket=ticket)
+        req.t_start = t_start
+        self.queue.put(req)  # raises AdmissionError when saturated
+        self.telemetry.observe_queue_depth(self.queue.depth())
+        return ticket
+
+    def request(self, w: Workload, algorithm: str = "flash",
+                tier: Tier = Tier.INTERACTIVE,
+                timeout: Optional[float] = 60.0) -> PlanAnswer:
+        """Synchronous ``submit``: block until the answer (or raise)."""
+        return self.submit(w, algorithm, tier).result(timeout)
+
+    def telemetry_snapshot(self) -> Dict:
+        """Full JSON-compatible metrics view (DESIGN.md section 2)."""
+        snap = self.telemetry.snapshot()
+        snap["cache"] = self.cache.stats()
+        snap["queue"]["depths"] = self.queue.depths()
+        with self._lock:
+            snap["pending_upgrades"] = len(self._inexact)
+        return snap
+
+    # -- fast-path helpers -------------------------------------------------
+
+    def _lookup_live(self, key: str, counted: bool) -> Optional[Plan]:
+        """Cache probe with TTL: an expired entry is evicted and reported
+        as a miss.  ``counted`` selects the hit/miss-counting ``lookup``
+        (client fast path) vs the silent ``peek`` (worker re-check of a
+        miss that was already counted)."""
+        if self.ttl.expired(key):
+            self.cache.evict(key)
+            self.ttl.forget(key)
+            with self._lock:
+                self._inexact.discard(key)
+            self.telemetry.count("expired")
+        return self.cache.lookup(key) if counted else self.cache.peek(key)
+
+    def _resolve_hit(self, ticket: PlanTicket, plan: Plan, key: str,
+                     t_start: float, tier: Tier, w: Workload,
+                     algorithm: str) -> None:
+        with self._lock:
+            exact = key not in self._inexact
+            was_prewarmed = self._prewarmed.pop(key, False) is None
+        self.telemetry.count("hits")
+        if was_prewarmed:
+            self.telemetry.count("prewarm_hits")
+        if not exact:
+            # The cached answer is still a degraded plan (its upgrade was
+            # shed or is queued behind other work): make sure an upgrade
+            # is in flight again.
+            self._schedule_background("upgrade", w, algorithm, key,
+                                      stale_plan=plan)
+        latency = time.perf_counter() - t_start
+        self.telemetry.observe_latency(tier.name, latency)
+        ticket.resolve(PlanAnswer(plan=plan, source="hit", exact=exact,
+                                  latency_s=latency,
+                                  request_id=-1, tier=tier))
+
+    # -- worker side -------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            req = self.queue.get(timeout=0.1)
+            if req is None:
+                if self._closed:
+                    return
+                # Idle housekeeping: age out expired entries in bites.
+                for key in self.ttl.sweep(self.cache, limit=32):
+                    self.ttl.forget(key)
+                    with self._lock:
+                        self._inexact.discard(key)
+                    self.telemetry.count("expired")
+                continue
+            with self._lock:
+                self._busy += 1
+            try:
+                if req.kind == "plan":
+                    self._serve(req)
+                elif req.kind == "upgrade":
+                    self._upgrade(req)
+                else:
+                    self._prewarm_job(req)
+            except Exception as exc:  # backstop: never kill a worker
+                req.fail(exc)
+                self.telemetry.count("errors")
+            finally:
+                with self._lock:
+                    self._busy -= 1
+                    if req.kind != "plan":
+                        self._background_keys.discard(req.key)
+
+    def _scheduler(self, algorithm: str) -> Scheduler:
+        # get_scheduler builds a fresh stateless instance; cheap enough
+        # that memoizing it here would only add another shared-state lock.
+        return get_scheduler(algorithm)
+
+    def _serve(self, req: PlanRequest) -> None:
+        key = req.key
+        with self._lock:
+            waiters = self._inflight.get(key)
+            if waiters is not None:
+                # Same fingerprint already being synthesized: ride it.
+                waiters.append(req)
+                self.telemetry.count("coalesced")
+                return
+            self._inflight[key] = [req]
+        plan: Optional[Plan] = None
+        source, exact = "hit", True
+        err: Optional[BaseException] = None
+        try:
+            plan = self._lookup_live(key, counted=False)
+            if plan is None:
+                plan, source, exact = self._synthesize_best(req)
+        except Exception as e:
+            err = e
+        finally:
+            with self._lock:
+                waiters = self._inflight.pop(key)
+        if err is not None or plan is None:
+            err = err if err is not None else RuntimeError(
+                "plan synthesis produced no plan")
+            self.telemetry.count("errors", len(waiters))
+            for r in waiters:
+                r.fail(err)
+            return
+        for i, r in enumerate(waiters):
+            self._answer(r, plan, source if i == 0 else "hit",
+                         exact)
+
+    def _synthesize_best(self, req: PlanRequest):
+        """The miss path: best available answer now, upgrade later."""
+        scheduler = self._scheduler(req.algorithm)
+        w, key = req.workload, req.key
+        plan, source, exact = None, "cold", True
+        prev = self.cache.peek_family(
+            cluster_family_key(w, req.algorithm))
+        if prev is not None and hasattr(scheduler, "try_repair_plan") and \
+                prev.cluster == w.cluster and \
+                prev.topo.fingerprint() == w.topo.fingerprint():
+            plan = scheduler.try_repair_plan(prev, w, fingerprint=key)
+            if plan is not None:
+                source, exact = "warm", False
+        if plan is None:
+            plan, exact = scheduler.synthesize_bounded(
+                w, self.synth_budget_seconds, fingerprint=key)
+            if not exact:
+                self.telemetry.count("degraded")
+        self.telemetry.observe_synthesis(plan.synth_seconds)
+        self._insert(key, plan, exact=exact)
+        plan.compile()  # answers carry a ready ExecutableSchedule
+        if not exact:
+            self._schedule_background("upgrade", w, req.algorithm, key,
+                                      stale_plan=plan)
+        if self.prewarm:
+            for pw in self.predictor.predict(w, req.algorithm):
+                pkey = traffic_fingerprint(pw, req.algorithm)
+                if self.cache.peek(pkey) is None:
+                    self._schedule_background("prewarm", pw, req.algorithm,
+                                              pkey)
+        return plan, source, exact
+
+    def _answer(self, req: PlanRequest, plan: Plan, source: str,
+                exact: bool) -> None:
+        self.telemetry.count({"hit": "hits"}.get(source, source))
+        latency = time.perf_counter() - getattr(req, "t_start",
+                                                time.perf_counter())
+        self.telemetry.observe_latency(req.tier.name, latency)
+        if req.ticket is not None:
+            req.ticket.resolve(PlanAnswer(
+                plan=plan, source=source, exact=exact, latency_s=latency,
+                request_id=req.request_id, tier=req.tier))
+
+    def _insert(self, key: str, plan: Plan, exact: bool) -> None:
+        self.cache.insert(key, plan)
+        self.ttl.note_insert(key)
+        with self._lock:
+            if exact:
+                self._inexact.discard(key)
+            else:
+                self._inexact.add(key)
+
+    # -- background jobs ---------------------------------------------------
+
+    def _schedule_background(self, kind: str, w: Workload, algorithm: str,
+                             key: str,
+                             stale_plan: Optional[Plan] = None) -> None:
+        with self._lock:
+            if key in self._background_keys:
+                return
+            self._background_keys.add(key)
+        req = PlanRequest(workload=w, algorithm=algorithm,
+                          tier=Tier.BACKGROUND, kind=kind, key=key,
+                          stale_plan=stale_plan)
+        try:
+            self.queue.put(req)
+        except (AdmissionError, ServerClosed):
+            with self._lock:
+                self._background_keys.discard(key)
+
+    def _upgrade(self, req: PlanRequest) -> None:
+        """Replace a degraded cache entry with the exact plan."""
+        scheduler = self._scheduler(req.algorithm)
+        plan = scheduler.synthesize(req.workload, fingerprint=req.key)
+        self.telemetry.observe_synthesis(plan.synth_seconds)
+        plan.compile()
+        self._insert(req.key, plan, exact=True)
+        self.telemetry.count("upgrades")
+
+    def _prewarm_job(self, req: PlanRequest) -> None:
+        """Synthesize a predicted fingerprint ahead of demand."""
+        if self._lookup_live(req.key, counted=False) is not None:
+            return  # a real request beat the prediction to it
+        scheduler = self._scheduler(req.algorithm)
+        plan = scheduler.synthesize(req.workload, fingerprint=req.key)
+        self.telemetry.observe_synthesis(plan.synth_seconds)
+        plan.compile()
+        self._insert(req.key, plan, exact=True)
+        with self._lock:
+            self._prewarmed[req.key] = None
+            while len(self._prewarmed) > 1024:
+                self._prewarmed.pop(next(iter(self._prewarmed)))
+        self.telemetry.count("prewarmed")
+
+    # -- queue hook --------------------------------------------------------
+
+    def _on_shed(self, req: PlanRequest, reason: str) -> None:
+        if req.kind == "plan":
+            self.telemetry.count(
+                "rejected" if reason == "rejected" else "shed")
+        else:
+            self.telemetry.count("background_shed")
+            with self._lock:
+                self._background_keys.discard(req.key)

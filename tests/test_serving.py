@@ -1,0 +1,487 @@
+"""Plan-serving daemon tests (issue 6): thread-safe PlanCache, tiered
+queue admission control, TTL eviction, background upgrades, drift
+prewarming, bounded synthesis, client fallback, and a multi-threaded
+soak over drifting traffic with conserved request accounting.
+"""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    PlanCache,
+    get_scheduler,
+    moe_workload,
+    simulate,
+    traffic_fingerprint,
+)
+from repro.core.birkhoff import AUTO_EXACT_MAX_N
+from repro.core.traffic import Workload
+from repro.serving import (
+    AdmissionError,
+    DriftPredictor,
+    LatencyReservoir,
+    PlanClient,
+    PlanRequest,
+    PlanServer,
+    PlanTicket,
+    ServerClosed,
+    Telemetry,
+    Tier,
+    TieredQueue,
+    TTLPolicy,
+)
+
+C = ClusterSpec(n_servers=4, m_gpus=2)
+
+
+def _w(seed=0, cluster=C):
+    return moe_workload(cluster, 512, 64, top_k=2, seed=seed)
+
+
+def _near_miss(w, seed=7, frac=0.05, jitter=0.2):
+    rng = np.random.default_rng(seed)
+    m = w.matrix.copy()
+    sel = rng.random(m.shape) < frac
+    m[sel] *= rng.uniform(1 - jitter, 1 + jitter, size=int(sel.sum()))
+    np.fill_diagonal(m, 0.0)
+    return Workload(w.cluster, m, w.topology)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- thread-safe PlanCache ---------------------------------------------------
+
+def test_plan_cache_concurrent_get_or_synthesize_is_canonical():
+    """N threads racing the same workloads: counters conserve, and every
+    fingerprint resolves to exactly one canonical Plan object."""
+    cache = PlanCache(capacity=64, warm_start=True)
+    flash = get_scheduler("flash")
+    workloads = [_w(seed=s) for s in range(4)]
+    per_thread = 12
+    n_threads = 6
+    results = [[] for _ in range(n_threads)]
+
+    def worker(i):
+        for j in range(per_thread):
+            w = workloads[(i + j) % len(workloads)]
+            results[i].append(cache.get_or_synthesize(flash, w))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(30.0)
+    assert not any(t.is_alive() for t in threads)
+    assert cache.hits + cache.misses == n_threads * per_thread
+    for w in workloads:
+        key = traffic_fingerprint(w, "flash")
+        canonical = cache.lookup(key)
+        assert canonical is not None
+        ids = {id(p) for i in range(n_threads)
+               for j, p in enumerate(results[i])
+               if workloads[(i + j) % len(workloads)] is w}
+        assert ids == {id(canonical)}
+
+
+def test_plan_cache_stats_snapshot():
+    cache = PlanCache(capacity=8)
+    flash = get_scheduler("flash")
+    w = _w()
+    cache.get_or_synthesize(flash, w)
+    cache.get_or_synthesize(flash, w)
+    stats = cache.stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1
+    assert stats["size"] == 1 and stats["capacity"] == 8
+    assert stats["hit_rate"] == pytest.approx(0.5)
+
+
+def test_plan_cache_evict_and_peek():
+    cache = PlanCache(capacity=8, warm_start=True)
+    flash = get_scheduler("flash")
+    w = _w()
+    plan = cache.get_or_synthesize(flash, w)
+    key = traffic_fingerprint(w, "flash")
+    assert cache.peek(key) is plan
+    assert cache.evict(key)
+    assert not cache.evict(key)  # already gone
+    assert cache.peek(key) is None
+    assert len(cache) == 0
+
+
+# -- tiered queue ------------------------------------------------------------
+
+def _req(tier=Tier.INTERACTIVE, kind="plan", key="k"):
+    return PlanRequest(workload=_w(), algorithm="flash", tier=tier,
+                       kind=kind, key=key, ticket=PlanTicket())
+
+
+def test_queue_orders_by_tier_then_fifo():
+    q = TieredQueue(max_depth=16, stale_after=None)
+    r_bg = _req(Tier.BACKGROUND)
+    r_b1, r_b2 = _req(Tier.BATCH), _req(Tier.BATCH)
+    r_i = _req(Tier.INTERACTIVE)
+    for r in (r_bg, r_b1, r_b2, r_i):
+        q.put(r)
+    assert [q.get(0.1) for _ in range(4)] == [r_i, r_b1, r_b2, r_bg]
+    assert q.get(0.01) is None
+
+
+def test_queue_rejects_when_full_of_equal_priority_work():
+    q = TieredQueue(max_depth=2, stale_after=None)
+    q.put(_req()), q.put(_req())
+    victim = _req()
+    with pytest.raises(AdmissionError):
+        q.put(victim)
+    assert victim.ticket.done()
+    with pytest.raises(AdmissionError):
+        victim.ticket.result(0.1)
+
+
+def test_queue_preempts_newest_lower_priority_request():
+    q = TieredQueue(max_depth=2, stale_after=None)
+    bg_old, bg_new = _req(Tier.BACKGROUND), _req(Tier.BACKGROUND)
+    q.put(bg_old), q.put(bg_new)
+    hi = _req(Tier.INTERACTIVE)
+    q.put(hi)  # admitted by shedding bg_new (newest lower-priority)
+    assert bg_new.ticket.done() and not bg_old.ticket.done()
+    assert q.get(0.1) is hi
+    assert q.get(0.1) is bg_old
+
+
+def test_queue_sheds_stale_requests_instead_of_serving_them():
+    clock = FakeClock()
+    q = TieredQueue(max_depth=8, stale_after={Tier.INTERACTIVE: 1.0},
+                    clock=clock)
+    stale = _req(Tier.INTERACTIVE)
+    q.put(stale)
+    clock.advance(5.0)
+    fresh = _req(Tier.INTERACTIVE)
+    q.put(fresh)
+    assert q.get(0.0) is fresh  # stale one shed on the way out
+    assert stale.ticket.done()
+    with pytest.raises(AdmissionError):
+        stale.ticket.result(0.1)
+
+
+def test_queue_close_fails_all_waiters():
+    q = TieredQueue(max_depth=8, stale_after=None)
+    r = _req()
+    q.put(r)
+    q.close()
+    with pytest.raises(ServerClosed):
+        r.ticket.result(0.1)
+    with pytest.raises(ServerClosed):
+        q.put(_req())
+    assert q.get(0.01) is None  # closed + drained, no blocking
+
+
+def test_ticket_timeout():
+    with pytest.raises(TimeoutError):
+        PlanTicket().result(0.01)
+
+
+# -- TTL policy --------------------------------------------------------------
+
+def test_ttl_policy_expires_and_sweeps():
+    clock = FakeClock()
+    ttl = TTLPolicy(ttl_seconds=10.0, clock=clock)
+    cache = PlanCache(capacity=8)
+    flash = get_scheduler("flash")
+    w = _w()
+    plan = flash.synthesize(w)
+    key = traffic_fingerprint(w, "flash")
+    cache.insert(key, plan)
+    ttl.note_insert(key)
+    assert not ttl.expired(key)
+    clock.advance(11.0)
+    assert ttl.expired(key)
+    assert ttl.sweep(cache) == [key]
+    assert cache.peek(key) is None
+    assert ttl.sweep(cache) == []  # forgotten after the sweep
+
+
+def test_server_serves_expired_hit_as_miss():
+    clock = FakeClock()
+    ttl = TTLPolicy(ttl_seconds=5.0, clock=clock)
+    with PlanServer(workers=1, ttl=ttl, prewarm=False) as srv:
+        w = _w()
+        first = srv.request(w)
+        assert first.source == "cold"
+        assert srv.request(w).source == "hit"
+        clock.advance(6.0)
+        again = srv.request(w)
+        assert again.source == "cold"  # expired entry evicted, re-made
+        assert again.plan is not first.plan
+        assert srv.telemetry.get("expired") >= 1  # fast path or idle sweep
+
+
+# -- background upgrades -----------------------------------------------------
+
+def test_warm_answer_is_upgraded_to_exact_in_background():
+    with PlanServer(workers=1, prewarm=False) as srv:
+        w0 = _w(seed=0)
+        w1 = _near_miss(w0)
+        assert srv.request(w0).source == "cold"
+        warm = srv.request(w1)
+        assert warm.source == "warm" and not warm.exact
+        assert srv.drain(20.0)
+        after = srv.request(w1)
+        assert after.source == "hit" and after.exact
+        assert after.plan is not warm.plan
+        # The upgraded entry is indistinguishable from one-shot synthesis.
+        fresh = get_scheduler("flash").synthesize(w1)
+        a, b = after.plan.to_dict(), fresh.to_dict()
+        for d in (a, b):
+            d.pop("synth_seconds"), d.pop("fingerprint")
+        assert a == b
+        assert srv.telemetry.get("upgrades") == 1
+        assert srv.telemetry.get("warm") == 1
+
+
+def test_inexact_hit_reschedules_upgrade():
+    """If an upgrade was shed, a later hit on the still-inexact entry
+    queues a new one rather than serving degraded plans forever."""
+    with PlanServer(workers=1, prewarm=False) as srv:
+        w0 = _w(seed=0)
+        w1 = _near_miss(w0)
+        srv.request(w0)
+        assert srv.request(w1).source == "warm"
+        assert srv.drain(20.0)
+        upgrades0 = srv.telemetry.get("upgrades")
+        assert upgrades0 == 1
+        # Model a shed upgrade: the entry is marked inexact again with no
+        # background job queued for it.
+        key = traffic_fingerprint(w1, "flash")
+        with srv._lock:
+            srv._inexact.add(key)
+        hit = srv.request(w1)
+        assert hit.source == "hit" and not hit.exact
+        assert srv.drain(20.0)
+        assert srv.telemetry.get("upgrades") == upgrades0 + 1
+        assert srv.request(w1).exact
+
+
+# -- drift prewarming --------------------------------------------------------
+
+def _linear_trajectory(steps, cluster=C, seed=0):
+    """Arithmetic progression of matrices: the predictor's linear
+    extrapolation is exact on it."""
+    base = _w(seed=seed, cluster=cluster)
+    delta = np.ones_like(base.matrix) * 8.0
+    np.fill_diagonal(delta, 0.0)
+    return [Workload(cluster, base.matrix + k * delta, base.topology)
+            for k in range(steps)]
+
+
+def test_drift_predictor_linear_extrapolation():
+    traj = _linear_trajectory(3)
+    pred = DriftPredictor()
+    pred.observe(traj[0], "flash")
+    assert pred.predict(traj[0], "flash") == []  # one sample: no signal
+    pred.observe(traj[1], "flash")
+    out = pred.predict(traj[1], "flash")
+    assert len(out) == 1
+    np.testing.assert_allclose(out[0].matrix, traj[2].matrix)
+
+
+def test_drift_predictor_ignores_exact_repeats():
+    w = _w()
+    pred = DriftPredictor()
+    pred.observe(w, "flash")
+    pred.observe(Workload(w.cluster, w.matrix.copy(), w.topology), "flash")
+    assert pred.predict(w, "flash") == []
+
+
+def test_drift_predictor_bounds_families():
+    pred = DriftPredictor(max_families=2)
+    for n in (2, 4, 8):
+        cl = ClusterSpec(n_servers=n, m_gpus=2)
+        pred.observe(_w(cluster=cl), "flash")
+    assert pred.families() == 2
+
+
+def test_server_prewarms_predicted_next_step():
+    traj = _linear_trajectory(3)
+    with PlanServer(workers=1, prewarm=True) as srv:
+        assert srv.request(traj[0]).source == "cold"
+        assert srv.request(traj[1]).source in ("warm", "cold")
+        assert srv.drain(20.0)
+        assert srv.telemetry.get("prewarmed") >= 1
+        hit = srv.request(traj[2])
+        assert hit.source == "hit"  # synthesized before it was asked for
+        assert srv.telemetry.get("prewarm_hits") == 1
+
+
+# -- bounded synthesis -------------------------------------------------------
+
+def test_synthesize_bounded_unbudgeted_is_exact():
+    flash = get_scheduler("flash")
+    w = _w()
+    plan, exact = flash.synthesize_bounded(w)
+    assert exact
+    plan.validate(w)  # raises on an invalid plan
+
+
+def test_synthesize_bounded_degrades_under_tiny_budget():
+    flash = get_scheduler("flash")
+    w = _w(seed=3)
+    flash.synthesize_bounded(w)  # seed the EWMA latency model
+    w2 = _near_miss(w)
+    plan, exact = flash.synthesize_bounded(w2, 1e-12)
+    assert not exact  # repair-policy decomposition at n <= AUTO_EXACT_MAX_N
+    assert w.cluster.n_servers <= AUTO_EXACT_MAX_N
+    plan.validate(w2)  # degraded, but still a correct schedule
+
+
+def test_baseline_scheduler_bounded_is_always_exact():
+    hier = get_scheduler("hierarchical")
+    plan, exact = hier.synthesize_bounded(_w(), 1e-12)
+    assert exact  # baselines have no degraded mode
+    assert plan.algorithm == "hierarchical"
+
+
+# -- client ------------------------------------------------------------------
+
+def test_client_simulate_matches_inline_path():
+    w = _w(seed=5)
+    with PlanServer(workers=1, prewarm=False) as srv:
+        client = PlanClient(srv)
+        got = client.simulate(w)
+    want = simulate(w, "flash")
+    assert got.completion_time == pytest.approx(want.completion_time)
+    assert got.algbw == pytest.approx(want.algbw)
+
+
+def test_client_falls_back_inline_when_daemon_unavailable():
+    srv = PlanServer(workers=1)
+    srv.start()
+    srv.stop()
+    client = PlanClient(srv)
+    answer = client.get_plan(_w())
+    assert answer.source == "inline"
+    assert client.counters["inline"] == 1
+    strict = PlanClient(srv, inline_fallback=False)
+    with pytest.raises(ServerClosed):
+        strict.get_plan(_w())
+
+
+def test_submit_before_start_raises():
+    with pytest.raises(ServerClosed):
+        PlanServer(workers=1).submit(_w())
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def test_latency_reservoir_ring_and_percentiles():
+    res = LatencyReservoir(capacity=4)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        res.add(v)
+    assert res.percentile(50) == pytest.approx(2.5)
+    res.add(100.0)  # evicts the oldest sample (ring)
+    assert res.count == 5
+    assert res.percentile(100) == pytest.approx(100.0)
+    assert res.summary_us()["max_us"] == pytest.approx(100.0 * 1e6)
+
+
+def test_telemetry_snapshot_is_json_serializable():
+    tele = Telemetry()
+    tele.count("requests", 3)
+    tele.observe_latency("INTERACTIVE", 1e-4)
+    tele.observe_synthesis(2e-3)
+    tele.observe_queue_depth(5)
+    snap = json.loads(tele.to_json())
+    assert snap["counters"]["requests"] == 3
+    assert snap["latency"]["INTERACTIVE"]["count"] == 1
+    assert snap["synthesis"]["count"] == 1
+    assert sum(snap["synthesis"]["hist"].values()) == 1
+    assert snap["queue"]["peak_depth"] == 5
+
+
+# -- the soak ----------------------------------------------------------------
+
+def test_soak_concurrent_clients_on_drifting_traffic():
+    """N client threads replaying a drifting trajectory against one
+    daemon: no deadlock, every request accounted for exactly once, and
+    the repeat-heavy traffic keeps the cache hot."""
+    rng = np.random.default_rng(0)
+    base = _w(seed=1)
+    mats = [base.matrix]
+    for _ in range(29):
+        if rng.random() < 0.4 and len(mats) > 1:
+            mats.append(mats[int(rng.integers(len(mats)))])
+        else:
+            nxt = mats[-1].copy()
+            sel = rng.random(nxt.shape) < 0.05
+            nxt[sel] *= rng.uniform(0.8, 1.2, size=int(sel.sum()))
+            np.fill_diagonal(nxt, 0.0)
+            mats.append(nxt)
+    traj = [Workload(C, m) for m in mats]
+
+    queue = TieredQueue(max_depth=1024, stale_after=None)
+    n_clients = 6
+    with PlanServer(workers=3, queue=queue, prewarm=True) as srv:
+        clients = [PlanClient(srv, timeout=60.0, inline_fallback=False)
+                   for _ in range(n_clients)]
+        errors = []
+
+        def loop(client):
+            try:
+                for w in traj:
+                    answer = client.get_plan(w)
+                    assert answer.plan.algorithm == "flash"
+            except Exception as exc:  # pragma: no cover - failure path
+                errors.append(exc)
+
+        threads = [threading.Thread(target=loop, args=(c,))
+                   for c in clients]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120.0)
+        assert not any(t.is_alive() for t in threads), "soak deadlocked"
+        assert not errors
+        assert srv.drain(60.0)
+        snap = srv.telemetry_snapshot()
+
+    counters = snap["counters"]
+    total = n_clients * len(traj)
+    assert counters["requests"] == total
+    accounted = (counters.get("hits", 0) + counters.get("warm", 0)
+                 + counters.get("cold", 0) + counters.get("rejected", 0)
+                 + counters.get("shed", 0) + counters.get("errors", 0))
+    assert accounted == total
+    # 40% repeats visited by 6 clients: well over half must be hits.
+    assert counters.get("hits", 0) / total >= 0.5
+    # The snapshot round-trips through JSON (the export contract).
+    json.dumps(snap)
+
+
+def test_server_accounts_rejected_requests():
+    queue = TieredQueue(max_depth=1, stale_after=None)
+    srv = PlanServer(workers=1, queue=queue, prewarm=False)
+    # Not started: workers never drain, so the queue fills synchronously.
+    srv._running = True
+    try:
+        srv.submit(_w(seed=0))
+        with pytest.raises(AdmissionError):
+            srv.submit(_w(seed=99))
+        assert srv.telemetry.get("rejected") == 1
+        assert srv.telemetry.get("requests") == 2
+    finally:
+        srv._running = False
+        srv.queue.close()

@@ -20,6 +20,16 @@ executor removes the remaining per-iteration executor overhead.  Series:
                      `PlanCache(warm_start=True)` -> `simulate_many`
                      (cache hit -> compiled execute; near miss -> warm
                      repair; cold otherwise), reported as us/iteration.
+  dynamic.synth_amortized
+                     amortized per-step synthesis over the drift
+                     trajectory via `synthesize_trajectory` with the
+                     incremental DecompositionState engine, excluding the
+                     step-0 cold bootstrap (paid once per family, not per
+                     step).  Derived columns: one-shot repair baseline
+                     (`RepairConfig(incremental=False)`) and the ratio vs
+                     compiled execution -- the issue-7 acceptance bars
+                     (amortized <= 10x exec.cached32, incremental >= 2x
+                     one-shot) enforced by check_synth_budget.py.
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ import numpy as np
 from repro.core import (
     ClusterSpec,
     PlanCache,
+    RepairConfig,
     compile_plan,
     execute_plan,
     get_scheduler,
@@ -64,6 +75,27 @@ def _drift_trajectory(cluster, steps, seed=0):
         np.fill_diagonal(nxt, 0.0)
         mats.append(nxt)
     return [Workload(cluster, mat) for mat in mats]
+
+
+def _amortized_synth_us(scheduler, traj, config, passes=5):
+    """Mean synthesis seconds per trajectory step past the step-0 cold
+    bootstrap (the one full decomposition every family pays regardless of
+    engine).  Repeated signatures resolve from the trajectory memo and
+    cost zero synthesis -- exactly the serving cache's behavior.  The
+    chain is single-shot per pass, so the best of ``passes`` runs is the
+    low-noise estimate (the analogue of time_us's hot-loop averaging)."""
+    best = None
+    for _ in range(max(passes, 1)):
+        plans = scheduler.synthesize_trajectory(traj, config=config)
+        seen = {id(plans[0])}
+        total = 0.0
+        for p in plans[1:]:
+            if id(p) not in seen:
+                seen.add(id(p))
+                total += p.synth_seconds
+        us = total * 1e6 / max(len(traj) - 1, 1)
+        best = us if best is None else min(best, us)
+    return best
 
 
 def run(csv: Csv):
@@ -111,6 +143,23 @@ def run(csv: Csv):
              f"steps={len(traj)}|hits={cache.hits}|misses={cache.misses}"
              f"|warm_hits={cache.warm_hits}"
              f"|mean_algbw_gbps={algbw:.2f}")
+
+    # Amortized per-step synthesis: incremental delta-decomposition vs the
+    # legacy one-shot repair loop, both fused over the same trajectory.
+    # One warmup pass (house style: time_us warms once) keeps allocator
+    # and code-path effects out of the single-shot chain measurement.
+    traj_s = _drift_trajectory(cluster, _TRAJ_STEPS, seed=11)
+    sched_flash = get_scheduler("flash")
+    _amortized_synth_us(sched_flash, traj_s, RepairConfig())
+    inc_us = _amortized_synth_us(sched_flash, traj_s, RepairConfig())
+    one_us = _amortized_synth_us(sched_flash, traj_s,
+                                 RepairConfig(incremental=False))
+    csv.emit("dynamic.synth_amortized", inc_us,
+             f"oneshot_us={one_us:.1f}"
+             f"|speedup={one_us / max(inc_us, 1e-9):.1f}x"
+             f"|exec_us={compiled_us:.2f}"
+             f"|ratio={inc_us / max(compiled_us, 1e-9):.2f}x"
+             f"|steps={len(traj_s)}")
 
 
 if __name__ == "__main__":

@@ -8,7 +8,15 @@ dynamic-MoE traffic fingerprint repeats across iterations.  The Theorem 1-3
 analytic bounds live in bounds.py.
 """
 
-from .birkhoff import Stage, birkhoff_decompose, max_line_sum, stage_duration
+from .birkhoff import (
+    DecompositionState,
+    Stage,
+    StageBlock,
+    birkhoff_decompose,
+    effective_pair_caps,
+    max_line_sum,
+    stage_duration,
+)
 from .bounds import gap_bound, t_flash_worst_case, t_optimal
 from .plan import (
     BarrierStage,
@@ -16,6 +24,7 @@ from .plan import (
     FanOutBurst,
     IntraOverlapPhase,
     LoadBalancePhase,
+    PermutationBlock,
     PermutationStage,
     Plan,
     PlanCache,
@@ -28,6 +37,7 @@ from .plan import (
 )
 from .schedulers import (
     FlashPlan,
+    RepairConfig,
     Scheduler,
     available_schedulers,
     flash_schedule,
@@ -59,7 +69,10 @@ from .traffic import (
 
 __all__ = [
     "Stage",
+    "StageBlock",
+    "DecompositionState",
     "birkhoff_decompose",
+    "effective_pair_caps",
     "max_line_sum",
     "stage_duration",
     "gap_bound",
@@ -73,6 +86,7 @@ __all__ = [
     "traffic_fingerprint",
     "LoadBalancePhase",
     "PermutationStage",
+    "PermutationBlock",
     "BarrierStage",
     "FanOutBurst",
     "RailStage",
@@ -80,6 +94,7 @@ __all__ = [
     "RedistributePhase",
     "IntraOverlapPhase",
     "Scheduler",
+    "RepairConfig",
     "register_scheduler",
     "get_scheduler",
     "available_schedulers",

@@ -81,16 +81,20 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import threading
 from collections import deque
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = [
     "Stage",
+    "StageBlock",
+    "DecompositionState",
     "pad_to_doubly_balanced",
     "hopcroft_karp",
     "birkhoff_decompose",
+    "effective_pair_caps",
     "max_line_sum",
     "live_slots",
     "live_slots_batch",
@@ -557,18 +561,40 @@ def _pair_caps(topology, n: int) -> np.ndarray:
     return topology.pair_capacity()
 
 
+def effective_pair_caps(caps: np.ndarray) -> np.ndarray:
+    """Pair capacities as the time-domain decomposition consumes them.
+
+    A fully disconnected pair can never drain -- keep it schedulable (the
+    executor charges infinity) by converting at the slowest live capacity.
+    The diagonal is forced to 1.0; it is never consulted because traffic
+    matrices carry a zero diagonal.
+    """
+    n = caps.shape[0]
+    off = ~np.eye(n, dtype=bool)
+    pos = caps[off & (caps > 0)]
+    fallback = float(pos.min()) if pos.size else 1.0
+    caps_eff = np.where(caps > 0, caps, fallback)
+    np.fill_diagonal(caps_eff, 1.0)
+    return caps_eff
+
+
+def _capacity_pref_rank(caps_eff: np.ndarray) -> np.ndarray:
+    """Per-row preference: descending pair capacity, ascending index on ties
+    (stable argsort), so uniform-capacity rows keep first-fit order."""
+    n = caps_eff.shape[0]
+    order = np.argsort(-caps_eff, axis=1, kind="stable")
+    rank = np.empty((n, n), dtype=np.int64)
+    np.put_along_axis(rank, order, np.broadcast_to(np.arange(n), (n, n)),
+                      axis=1)
+    return rank
+
+
 def _capacity_aware_stages(t: np.ndarray, caps: np.ndarray, n: int,
                            sort_ascending: bool, coalesce: bool,
                            policy: str) -> List[Stage]:
     """Time-domain decomposition: stages of tau = t / pair_capacity, matched
     with high-capacity-first preference, converted back to byte slots."""
-    # A fully disconnected pair can never drain -- keep it schedulable (the
-    # executor charges infinity) by converting at the slowest live capacity.
-    off = ~np.eye(n, dtype=bool)
-    pos = caps[off & (caps > 0)]
-    fallback = float(pos.min()) if pos.size else 1.0
-    caps_eff = np.where(caps > 0, caps, fallback)
-    np.fill_diagonal(caps_eff, 1.0)  # unused: t's diagonal is zero
+    caps_eff = effective_pair_caps(caps)
 
     tau = t / caps_eff
     total = max_line_sum(tau)
@@ -577,12 +603,7 @@ def _capacity_aware_stages(t: np.ndarray, caps: np.ndarray, n: int,
     eps = total * _EPS_REL
     work = tau + pad_to_doubly_balanced(tau)
 
-    # Per-row preference: descending pair capacity, ascending index on ties
-    # (stable argsort), so uniform-capacity rows keep first-fit order.
-    order = np.argsort(-caps_eff, axis=1, kind="stable")
-    rank = np.empty((n, n), dtype=np.int64)
-    np.put_along_axis(rank, order, np.broadcast_to(np.arange(n), (n, n)),
-                      axis=1)
+    rank = _capacity_pref_rank(caps_eff)
 
     stages = _incremental_stages(work, tau, n, eps,
                                  _resolve_policy(policy, n), pref_rank=rank)
@@ -668,7 +689,10 @@ def stage_duration(stage: Stage, caps: np.ndarray) -> float:
 
 def _incremental_stages(work: np.ndarray, real: np.ndarray, n: int,
                         eps: float, policy: str,
-                        pref_rank: Optional[np.ndarray] = None) -> List[Stage]:
+                        pref_rank: Optional[np.ndarray] = None,
+                        init_match: Optional[List[int]] = None,
+                        seed_out: Optional[List[List[int]]] = None
+                        ) -> List[Stage]:
     """Shared vectorized stage loop for the exact and repair engines.
 
     Per stage, the float math is pure NumPy fancy indexing; the support's
@@ -679,6 +703,15 @@ def _incremental_stages(work: np.ndarray, real: np.ndarray, n: int,
     instead of ascending column index, which steers both engines' matching
     choices toward high-capacity edges; None keeps the original order
     bit-for-bit.
+
+    ``init_match`` warm-seeds the repair engine's first matching: edges of a
+    previous decomposition's perfect matching that still lie on the current
+    support are adopted, and only the rows they no longer cover pay
+    augmenting-path searches -- the "targeted at changed rows/cols" half of
+    incremental trajectory synthesis (DecompositionState).  ``seed_out``,
+    when given, receives that first perfect matching (one append) so the
+    caller can carry it to the next delta.  Both are ignored by the exact
+    engine, whose matching is pinned by the first-fit invariant.
     """
     mask = work > eps
     if pref_rank is None:
@@ -705,8 +738,17 @@ def _incremental_stages(work: np.ndarray, real: np.ndarray, n: int,
         # Repair engine: one full matching up front, patched ever after.
         match_l = [-1] * n
         match_r = [-1] * n
+        if init_match is not None:
+            # Adopt surviving edges of the carried matching; the augment
+            # phases below only have to repair the rows that lost theirs.
+            for i, j in enumerate(init_match):
+                if 0 <= j < n and mask[i, j] and match_r[j] == -1:
+                    match_l[i] = j
+                    match_r[j] = i
         _augment_phases(row_adj, match_l, match_r)
         n_free = sum(1 for m in match_l if m == -1)
+        if seed_out is not None:
+            seed_out.append(list(match_l))
 
     rows = np.arange(n)
     stages: List[Stage] = []
@@ -829,6 +871,460 @@ def _coalesce(stages: List[Stage]) -> List[Stage]:
             order.append(s.perm)
     return [Stage(perm=p, size=merged[p][0], sent=merged[p][1])
             for p in order]
+
+
+# -- incremental trajectory synthesis ---------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageBlock:
+    """A whole stage list as stacked arrays (one emission of the
+    incremental engine).
+
+    ``perms`` is (S, n) int64 with -1 for idle senders, ``sizes`` (S,) the
+    per-stage chunk sizes, ``sent`` (S, n) the genuine bytes each sender
+    carries, and ``slots`` either None (capacity-blind: every live slot is
+    the uniform stage size) or (S, n) per-sender slot bytes.  Stages are
+    already in execution order (ascending size, or ascending duration when
+    capacity-aware).  Keeping the arrays stacked is the point: a drifting
+    trajectory re-emits ~n^2 stages per step, and materializing that many
+    Stage/PermutationStage objects costs more than the decomposition delta
+    itself.
+    """
+
+    perms: np.ndarray
+    sizes: np.ndarray
+    sent: np.ndarray
+    slots: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return int(self.sizes.shape[0])
+
+    def to_stages(self) -> List[Stage]:
+        """Expand into per-stage objects (tests / interop, not hot paths)."""
+        out: List[Stage] = []
+        for k in range(len(self)):
+            out.append(Stage(
+                perm=tuple(self.perms[k].tolist()),
+                size=float(self.sizes[k]),
+                sent=tuple(self.sent[k].tolist()),
+                slots=(tuple(self.slots[k].tolist())
+                       if self.slots is not None else None)))
+        return out
+
+
+class DecompositionState:
+    """Birkhoff decomposition *maintained* across a drifting trajectory.
+
+    Instead of re-decomposing every matrix from scratch (or re-walking a
+    cached ancestor's stage list in Python), the state keeps the previous
+    decomposition's structure -- stage permutations, per-slot byte
+    capacities, and the repair engine's last perfect matching -- and
+    ``update(t_new)`` re-derives a valid stage list for the next matrix of
+    the trajectory in three vectorized moves:
+
+      1. *Refill*: every existing slot re-fills from the new matrix by a
+         water-fill over each pair's slots in stage order (``take =
+         clip(t_pair - prior_cap, 0, cap)`` with a segmented cumsum), so
+         shrinking traffic shrinks slots in place and growing traffic
+         spills into each pair's last slot, which carries ``headroom``
+         extra capacity exactly to absorb drift without structural change.
+      2. *Residual*: whatever the slots could not absorb is decomposed
+         fresh -- but it is a sparse few-percent matrix, and the repair
+         engine is warm-seeded with the previous residual's perfect
+         matching (augmenting-path work only on changed rows/cols).  New
+         stages join the state, so the structure tracks the trajectory.
+      3. *Ratchet*: repair quality can only be audited, not guaranteed --
+         cumulative drift could in principle stretch the stage list.  The
+         update trips (returns no block and invalidates the state) when the
+         residual fraction, live stage count, or total window length
+         crosses the configured bounds; the caller then resynthesizes cold
+         and builds a fresh state.  This bounds trajectory degradation by
+         construction.
+
+    One state serves one (cluster, topology, algorithm) plan family.
+    ``update`` is serialized by an internal lock; callers hand the state
+    from plan to plan (see FlashScheduler.try_repair_plan) so a family's
+    misses chain through it.
+    """
+
+    def __init__(self, perms: np.ndarray, sent: np.ndarray, *,
+                 caps_eff: Optional[np.ndarray] = None,
+                 headroom: float = 0.5):
+        perms = np.asarray(perms, dtype=np.int64)
+        sent = np.asarray(sent, dtype=np.float64)
+        if perms.ndim != 2 or perms.shape != sent.shape:
+            raise ValueError(
+                f"perms {perms.shape} and sent {sent.shape} must be "
+                f"matching (S, n) arrays")
+        self.n = int(perms.shape[1])
+        self.aware = caps_eff is not None
+        self.caps_eff = (np.asarray(caps_eff, dtype=np.float64)
+                         if caps_eff is not None else None)
+        if self.aware and self.caps_eff.shape != (self.n, self.n):
+            raise ValueError("caps_eff must be (n, n)")
+        self.headroom = float(headroom)
+        self.invalid = False
+        self.updates = 0
+        self._rank = (_capacity_pref_rank(self.caps_eff)
+                      if self.aware else None)
+        self._res_seed: Optional[List[int]] = None
+        self._take_buf: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+        # Slots with no byte capacity can never carry traffic; drop them at
+        # ingest so the flat index stays dense.
+        self._perms2d = np.where(sent > 0.0, perms, -1)
+        self._capmat = np.where(sent > 0.0, sent, 0.0)
+        self._build_index()
+
+    @classmethod
+    def from_stages(cls, stages: Sequence[Stage], n: int, *,
+                    caps_eff: Optional[np.ndarray] = None,
+                    headroom: float = 0.5) -> "DecompositionState":
+        """Seed a state from a cold decomposition's stage list."""
+        if len(stages) == 0:
+            perms = np.full((0, n), -1, dtype=np.int64)
+            sent = np.zeros((0, n))
+        else:
+            perms = np.array([s.perm for s in stages], dtype=np.int64)
+            sent = np.array([s.sent for s in stages], dtype=np.float64)
+        return cls(perms, sent, caps_eff=caps_eff, headroom=headroom)
+
+    # -- flat slot index -----------------------------------------------------
+
+    def _build_index(self) -> None:
+        """Flatten live slots into arrays sorted by (pair, stage order).
+
+        The water-fill needs each pair's slots contiguous and in stage
+        order so an exclusive prefix sum of capacities gives every slot's
+        fill threshold.  Rebuilt only when the structure changes (residual
+        stages appended), never on a pure refill.
+        """
+        n = self.n
+        stage_idx, src = np.nonzero(self._capmat > 0.0)
+        dst = self._perms2d[stage_idx, src]
+        pair = src * n + dst
+        # Single fused-key sort (pair-major, stage-minor): one stable
+        # argsort is ~3x cheaper than the equivalent two-pass lexsort.
+        n_store = self._perms2d.shape[0]
+        order = np.argsort(pair * n_store + stage_idx, kind="stable")
+        # Everything the refill touches per update is kept in the
+        # STAGE-MAJOR domain (np.nonzero is already row-major): the
+        # per-slot fill thresholds need pair-contiguity only here, at
+        # build time, so the water-fill cumsums run pair-major and are
+        # scattered back once.  update() is then pure elementwise work on
+        # these flat arrays plus one reduceat per stage -- no dense (S, n)
+        # pass and no per-update permutation.
+        self._sm_stage = stage_idx
+        self._sm_src = src
+        self._sm_flat = src * n + dst  # ravel index into t_new
+        self._sm_out_flat = stage_idx * n + src  # ravel index into (S, n)
+        if stage_idx.size:
+            stg_cuts = np.flatnonzero(np.diff(stage_idx)) + 1
+            self._stg_start = np.concatenate(([0], stg_cuts))
+            self._stg_ids = stage_idx[self._stg_start]
+        else:
+            self._stg_start = np.zeros(0, dtype=np.int64)
+            self._stg_ids = np.zeros(0, dtype=np.int64)
+        # True when every stored stage owns at least one slot (the normal
+        # case: stages are born with traffic): the per-stage reduceat then
+        # yields sizes directly, no zeros+scatter.
+        self._stg_full = self._stg_ids.size == self._perms2d.shape[0]
+        self._sm_paircap = self.caps_eff[src, dst] if self.aware else None
+        cap = self._capmat[stage_idx, src][order]
+        pair_sorted = pair[order]
+        cuts = np.flatnonzero(np.diff(pair_sorted)) + 1
+        start = np.concatenate(([0], cuts))
+        end = np.concatenate((cuts, [pair_sorted.size]))
+        if pair_sorted.size == 0:
+            start = np.zeros(0, dtype=np.int64)
+            end = np.zeros(0, dtype=np.int64)
+        # Headroom rides each pair's last (largest-threshold) slot: growth
+        # within `headroom x pair_total` refills in place, no new stages.
+        cap_fill = cap.copy()
+        if start.size:
+            pair_tot = np.add.reduceat(cap, start)
+            cap_fill[end - 1] += self.headroom * pair_tot
+        cum = np.cumsum(cap_fill)
+        prior = cum - cap_fill
+        if start.size:
+            prior = prior - np.repeat(prior[start], end - start)
+        # Scatter thresholds back to stage-major slot positions.
+        self._cap_sm = np.empty_like(cap_fill)
+        self._cap_sm[order] = cap_fill
+        self._prior_sm = np.empty_like(prior)
+        self._prior_sm[order] = prior
+        # Closed-form fill totals: a water-fill delivers min(t_pair,
+        # pair capacity), so the residual never needs the per-slot takes.
+        self._pair_cap_tot = np.zeros((n, n))
+        if start.size:
+            src_first = src[order][start]
+            dst_first = dst[order][start]
+            self._pair_cap_tot[src_first, dst_first] = np.add.reduceat(
+                cap_fill, start)
+
+    def _append_live(self, stages: Sequence[Stage],
+                     take_sm: np.ndarray) -> np.ndarray:
+        """Extend the flat index with freshly decomposed residual stages,
+        in place -- no full rebuild.  New stages append at the end of the
+        store (small residual slivers, executed last).  The carried
+        headroom stays where it is; each touched pair gains extra headroom
+        on its last *new* slot, so the invariant ``pair fill capacity =
+        slot bytes + headroom x pair bytes`` keeps tracking the traffic.
+        Returns ``take_sm`` extended with the new slots' takes (each new
+        slot carries exactly its decomposed bytes this step).
+        """
+        n = self.n
+        n_old_stages = self._perms2d.shape[0]
+        n_old_slots = take_sm.size
+        perms = np.array([s.perm for s in stages], dtype=np.int64)
+        sent = np.array([s.sent for s in stages], dtype=np.float64)
+        live = sent > 0.0
+        perms = np.where(live, perms, -1)
+        self._perms2d = np.concatenate([self._perms2d, perms], axis=0)
+        self._capmat = np.concatenate(
+            [self._capmat, np.where(live, sent, 0.0)], axis=0)
+        f_idx, src = np.nonzero(live)
+        stage = n_old_stages + f_idx
+        dst = perms[f_idx, src]
+        flat = src * n + dst
+        cap = sent[f_idx, src]
+        # Water-fill thresholds: a new slot fills only after everything
+        # its pair already had -- stored slots incl. their headroom, plus
+        # earlier new slots of the same pair in append order.  The slot
+        # count here is tiny (residual support), so a Python walk beats
+        # another segmented-cumsum setup.
+        prior = np.empty(cap.size)
+        cap_fill = cap.copy()
+        base = self._pair_cap_tot.ravel()
+        added: dict = {}
+        last_new: dict = {}
+        for k in range(cap.size):
+            p = int(flat[k])
+            a = added.get(p, 0.0)
+            prior[k] = base[p] + a
+            added[p] = a + float(cap[k])
+            last_new[p] = k
+        for p, k in last_new.items():
+            cap_fill[k] += self.headroom * added[p]
+        for p, a in added.items():
+            base[p] += a * (1.0 + self.headroom)
+        self._sm_stage = np.concatenate([self._sm_stage, stage])
+        self._sm_src = np.concatenate([self._sm_src, src])
+        self._sm_flat = np.concatenate([self._sm_flat, flat])
+        self._sm_out_flat = np.concatenate(
+            [self._sm_out_flat, stage * n + src])
+        self._cap_sm = np.concatenate([self._cap_sm, cap_fill])
+        self._prior_sm = np.concatenate([self._prior_sm, prior])
+        if stage.size:
+            starts = np.concatenate(
+                ([0], np.flatnonzero(np.diff(stage)) + 1))
+            self._stg_start = np.concatenate(
+                [self._stg_start, n_old_slots + starts])
+            self._stg_ids = np.concatenate([self._stg_ids, stage[starts]])
+        self._stg_full = self._stg_ids.size == self._perms2d.shape[0]
+        if self.aware:
+            self._sm_paircap = np.concatenate(
+                [self._sm_paircap, self.caps_eff[src, dst]])
+        return np.concatenate([take_sm, cap])
+
+    # -- the delta path ------------------------------------------------------
+
+    def update(self, t_new: np.ndarray, *,
+               max_residual_fraction: float = 0.25,
+               max_stage_drift: float = 2.0,
+               quality_ratchet: float = 1.10
+               ) -> Tuple[Optional[StageBlock], dict]:
+        """Re-derive a stage list for ``t_new`` from the carried structure.
+
+        Returns ``(block, stats)``.  ``block`` is None when a ratchet
+        tripped (stats["tripped"] names which); the state is then invalid
+        and the caller must resynthesize cold.  ``stats`` always carries
+        ``residual_fraction`` and, on success, ``n_stages`` and
+        ``quality`` (total window length over the exact lower bound).
+        """
+        with self._lock:
+            return self._update_locked(
+                np.asarray(t_new, dtype=np.float64),
+                max_residual_fraction, max_stage_drift, quality_ratchet)
+
+    def _update_locked(self, t_new, max_residual_fraction, max_stage_drift,
+                       quality_ratchet):
+        if self.invalid:
+            raise RuntimeError(
+                "DecompositionState tripped its ratchet; build a fresh one "
+                "from a cold synthesis")
+        n = self.n
+        if t_new.shape != (n, n):
+            raise ValueError(f"expected ({n}, {n}) matrix, got {t_new.shape}")
+        stats: dict = {"mode": "incremental"}
+        total = float(t_new.sum())
+
+        # 1. Refill, entirely in the stage-major domain: each slot takes
+        # clip(t_pair - prior, 0, cap) against its precomputed water-fill
+        # thresholds -- one flat gather plus in-place elementwise ops.
+        nslots = self._sm_src.size
+        if nslots:
+            # The takes never escape (emission scatters them into a fresh
+            # block), so reuse one scratch buffer across updates.
+            take_sm = self._take_buf
+            if take_sm is None or take_sm.size != nslots:
+                take_sm = np.empty(nslots)
+                self._take_buf = take_sm
+            np.take(t_new.reshape(-1), self._sm_flat, out=take_sm)
+            take_sm -= self._prior_sm
+            np.maximum(take_sm, 0.0, out=take_sm)
+            np.minimum(take_sm, self._cap_sm, out=take_sm)
+        else:
+            take_sm = np.zeros(0)
+
+        # 2. Residual: what the slots could not absorb, in closed form --
+        # the water-fill delivers exactly min(t_pair, pair capacity), so
+        # no per-slot reduction is needed.  Entries below the cutoff are
+        # float fuzz (and far inside the validator's conservation
+        # tolerance); dropping them keeps the residual support sparse.
+        residual = np.maximum(t_new - self._pair_cap_tot, 0.0)
+        byte_line = max_line_sum(t_new)  # shared: cutoff + quality lower
+        cutoff = 1e-10 * max(byte_line, 1e-300)
+        if float(residual.max(initial=0.0)) <= cutoff:
+            # Fully absorbed (the steady case) -- skip the masking pass.
+            res_total = 0.0
+        else:
+            residual[residual <= cutoff] = 0.0
+            res_total = float(residual.sum())
+        res_frac = res_total / total if total > 0 else 0.0
+        stats["residual_fraction"] = res_frac
+        if res_frac > max_residual_fraction:
+            self.invalid = True
+            stats["tripped"] = "residual"
+            return None, stats
+
+        if res_total > 0.0:
+            fresh = self._decompose_residual(residual)
+            stats["residual_stages"] = len(fresh)
+            if fresh:
+                # Structural change (rare on a drifting trajectory: the
+                # slot headroom absorbs in-place drift): extend the flat
+                # index in place -- no rebuild, no dense pass.  Appended
+                # stages sit at the end of the store and execute last.
+                take_sm = self._append_live(fresh, take_sm)
+                nslots = take_sm.size
+
+        # 3. Emit + ratchet audit: per-stage maxima via one flat reduceat
+        # -- no dense (S, n) pass on the trajectory hot path.
+        S = self._perms2d.shape[0]
+        if self._stg_full and nslots:
+            sizes_all = np.maximum.reduceat(take_sm, self._stg_start)
+        else:
+            sizes_all = np.zeros(S)
+            if nslots:
+                sizes_all[self._stg_ids] = np.maximum.reduceat(
+                    take_sm, self._stg_start)
+        if not self.aware:
+            key_all = sizes_all
+        elif self._stg_full and nslots:
+            key_all = np.maximum.reduceat(
+                take_sm / self._sm_paircap, self._stg_start)
+        else:
+            key_all = np.zeros(S)
+            if nslots:
+                key_all[self._stg_ids] = np.maximum.reduceat(
+                    take_sm / self._sm_paircap, self._stg_start)
+        live = sizes_all > 0.0
+        n_live = int(live.sum())
+        stats["n_stages"] = n_live
+        bound = n * n - 2 * n + 2
+        if n_live > max_stage_drift * bound:
+            self.invalid = True
+            stats["tripped"] = "stages"
+            return None, stats
+        # Quality: an exact decomposition's windows sum to the max line sum
+        # (bytes, or seconds in the aware time domain) -- the Theorem 1
+        # completion-time numerator.  Chained repairs may drift above it.
+        lower = max_line_sum(t_new / self.caps_eff) if self.aware \
+            else byte_line
+        all_live = n_live == S
+        q_sum = float(key_all.sum() if all_live else key_all[live].sum())
+        quality = q_sum / lower if lower > 0 else 1.0
+        stats["quality"] = quality
+        if quality > quality_ratchet:
+            self.invalid = True
+            stats["tripped"] = "quality"
+            return None, stats
+
+        # Emission keeps the stored stage order: it is the cold
+        # decomposition's ascending execution order, and per-step drift
+        # perturbs sizes only locally, so re-sorting every update would
+        # cost an (S, n) gather for a negligible pipeline-overlap gain
+        # (the quality ratchet audits the window sum either way).
+        # Appended residual slivers execute last.
+        if all_live and bool(take_sm.all()):
+            # Steady state -- every carried stage and slot refilled.  The
+            # store IS the emission: zero-copy perms, and only the sent
+            # scatter allocates (through the precomputed flat index: one
+            # 1-D fancy store instead of a 2-D advanced-index resolve).
+            out_sent = np.zeros(S * n)
+            out_sent[self._sm_out_flat] = take_sm
+            out_sent.shape = (S, n)
+            out_perms = self._perms2d
+            out_sizes = sizes_all
+        else:
+            idx = np.flatnonzero(live)
+            row = np.full(S, -1, dtype=np.int64)
+            row[idx] = np.arange(idx.size)
+            live_slot = take_sm > 0.0
+            out_sent = np.zeros((idx.size, n))
+            out_sent[row[self._sm_stage[live_slot]],
+                     self._sm_src[live_slot]] = take_sm[live_slot]
+            out_perms = self._perms2d[idx]
+            if not live_slot.all():
+                # A carried slot that refilled to zero is idle this step:
+                # mask its perm entry so the emitted stage stays tight.
+                dead = ~live_slot
+                dr = row[self._sm_stage[dead]]
+                keep = dr >= 0
+                out_perms[dr[keep], self._sm_src[dead][keep]] = -1
+            out_sizes = sizes_all[idx]
+        block = StageBlock(
+            perms=out_perms,
+            sizes=out_sizes,
+            sent=out_sent,
+            slots=out_sent.copy() if self.aware else None)
+        self.updates += 1
+        return block, stats
+
+    def _decompose_residual(self, residual: np.ndarray) -> List[Stage]:
+        """Fresh stages for the unabsorbed delta, warm-seeded matching.
+
+        Capacity-aware states decompose in the time domain (matching the
+        cold flash_ca path) and convert weights back to byte ``sent``
+        entries; the per-slot capacity recorded in the state is the byte
+        count, so refills stay in the byte domain either way.
+        """
+        n = self.n
+        work_base = residual / self.caps_eff if self.aware else residual
+        total = max_line_sum(work_base)
+        if total <= 0:
+            return []
+        eps = total * _EPS_REL
+        work = work_base + pad_to_doubly_balanced(work_base)
+        realm = work_base.copy()
+        seed: List[List[int]] = []
+        stages = _incremental_stages(work, realm, n, eps, "repair",
+                                     pref_rank=self._rank,
+                                     init_match=self._res_seed,
+                                     seed_out=seed)
+        self._res_seed = seed[0] if seed else None
+        stages = _coalesce(stages)
+        out: List[Stage] = []
+        for s in stages:
+            if self.aware:
+                s = _stage_to_bytes(s, self.caps_eff, n)
+                if s is None:
+                    continue
+            elif not any(v > 0.0 for v in s.sent):
+                continue  # padding-only stage: nothing to carry forward
+            out.append(s)
+        return out
 
 
 def _greedy_drain(real: np.ndarray, stages: List[Stage], eps: float) -> None:

@@ -47,7 +47,7 @@ from typing import Any, ClassVar, Dict, Optional, Tuple
 
 import numpy as np
 
-from .birkhoff import live_slots
+from .birkhoff import live_slots, live_slots_batch
 from .topology import Topology, uniform_nic_shares
 from .traffic import ClusterSpec, Workload, server_reduce
 
@@ -60,6 +60,7 @@ __all__ = [
     "plan_family_key",
     "LoadBalancePhase",
     "PermutationStage",
+    "PermutationBlock",
     "BarrierStage",
     "FanOutBurst",
     "RailStage",
@@ -195,6 +196,88 @@ class PermutationStage(PhaseBase):
                    sent=tuple(float(x) for x in d["sent"]),
                    slots=None if slots is None
                    else tuple(float(x) for x in slots))
+
+
+@register_phase
+@dataclasses.dataclass(frozen=True, eq=False)
+class PermutationBlock(PhaseBase):
+    """A run of consecutive permutation stages carried as stacked arrays.
+
+    Semantically identical to emitting ``len(sizes)`` PermutationStages in
+    order -- same pipelining, same slot rules -- but the incremental
+    trajectory engine (birkhoff.DecompositionState) re-emits ~n^2 stages
+    per drift step, and materializing that many per-stage objects costs
+    more than the decomposition delta itself.  ``perms`` is (S, n) with -1
+    for idle senders, ``sizes`` (S,), ``sent`` (S, n) genuine payload
+    bytes, and ``slots`` either None (capacity-blind: uniform ``size``-byte
+    slots) or (S, n) per-sender slot bytes (capacity-aware).
+    """
+
+    kind: ClassVar[str] = "permutation_block"
+    perms: np.ndarray
+    sizes: np.ndarray
+    sent: np.ndarray
+    slots: Optional[np.ndarray] = None
+
+    @property
+    def n_stages(self) -> int:
+        return int(self.sizes.shape[0])
+
+    def payload(self, cluster):
+        return float(self.sent.sum()), 0.0
+
+    @property
+    def real_bytes(self) -> float:
+        return float(self.sent.sum())
+
+    def slot2d(self) -> np.ndarray:
+        """(S, n) per-sender slot bytes; blind rows broadcast the size."""
+        if self.slots is not None:
+            return np.asarray(self.slots, dtype=np.float64)
+        return np.broadcast_to(
+            np.asarray(self.sizes, dtype=np.float64)[:, None],
+            self.perms.shape)
+
+    def live_batch(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Memoized ``live_slots_batch``: ``(mask, dst, slot)`` over all S
+        stages -- the compiled executor's and validator's shared view."""
+        cached = self.__dict__.get("_live_batch")
+        if cached is None:
+            cached = live_slots_batch(self.perms, self.slot2d())
+            for a in cached:
+                a.flags.writeable = False
+            object.__setattr__(self, "_live_batch", cached)
+        return cached
+
+    def stage_view(self, k: int) -> PermutationStage:
+        """Stage ``k`` as an equivalent PermutationStage (interop paths:
+        the interpreted executor, FlashPlan export, the pipeline tail)."""
+        return PermutationStage(
+            perm=tuple(int(j) for j in self.perms[k]),
+            size=float(self.sizes[k]),
+            sent=tuple(float(x) for x in self.sent[k]),
+            slots=None if self.slots is None
+            else tuple(float(x) for x in self.slots[k]))
+
+    def iter_stages(self):
+        return (self.stage_view(k) for k in range(self.n_stages))
+
+    def to_dict(self):
+        d = {"kind": self.kind,
+             "perms": [[int(j) for j in row] for row in self.perms],
+             "sizes": _listify(self.sizes),
+             "sent": [_listify(row) for row in self.sent]}
+        if self.slots is not None:
+            d["slots"] = [_listify(row) for row in self.slots]
+        return d
+
+    @classmethod
+    def from_dict(cls, d):
+        slots = d.get("slots")
+        return cls(perms=np.asarray(d["perms"], dtype=np.int64),
+                   sizes=_np2d(d["sizes"]),
+                   sent=_np2d(d["sent"]),
+                   slots=None if slots is None else _np2d(slots))
 
 
 @register_phase
@@ -442,14 +525,19 @@ class Plan:
     def stages(self) -> Tuple[PhaseBase, ...]:
         """The inter-server stage phases, in execution order."""
         return tuple(p for p in self.phases if isinstance(
-            p, (PermutationStage, BarrierStage, FanOutBurst, RailStage,
-                BoundStage)))
+            p, (PermutationStage, PermutationBlock, BarrierStage,
+                FanOutBurst, RailStage, BoundStage)))
 
     @property
     def n_stages(self) -> int:
         total = 0
         for p in self.stages:
-            total += p.n_rounds if isinstance(p, RailStage) else 1
+            if isinstance(p, RailStage):
+                total += p.n_rounds
+            elif isinstance(p, PermutationBlock):
+                total += p.n_stages
+            else:
+                total += 1
         return total
 
     @property
@@ -546,6 +634,8 @@ class Plan:
                         raise PlanValidationError(
                             "permutation stage payload exceeds its "
                             "per-sender slot")
+            elif isinstance(p, PermutationBlock):
+                self._validate_block(p, rtol)
         if self.capacity_aware:
             self._check_slot_rail_feasibility(rtol)
 
@@ -570,6 +660,52 @@ class Plan:
                 f"intra-server bytes not conserved: plan carries "
                 f"{intra_carried:.6g}, workload has {intra_expected:.6g}")
 
+    def _validate_block(self, p: "PermutationBlock", rtol: float) -> None:
+        """PermutationStage structural checks, vectorized over a block."""
+        perms = np.asarray(p.perms, dtype=np.int64)
+        sent = np.asarray(p.sent, dtype=np.float64)
+        sizes = np.asarray(p.sizes, dtype=np.float64)
+        s_count, n = perms.shape
+        if sent.shape != (s_count, n) or sizes.shape != (s_count,):
+            raise PlanValidationError(
+                f"permutation block arrays disagree: perms {perms.shape}, "
+                f"sent {sent.shape}, sizes {sizes.shape}")
+        live = perms >= 0
+        if s_count:
+            dst = np.where(live, perms, 0)
+            if int(perms.max(initial=-1)) >= n or \
+                    int(perms.min(initial=0)) < -1:
+                raise PlanValidationError(
+                    "permutation block destination out of range")
+            recv = np.zeros((s_count, n))
+            np.add.at(recv, (np.arange(s_count)[:, None], dst),
+                      live.astype(np.float64))
+            if recv.max(initial=0.0) > 1:
+                k = int(np.argwhere(recv > 1)[0][0])
+                raise PlanValidationError(
+                    f"permutation stage has incast: "
+                    f"{tuple(perms[k].tolist())}")
+            if bool((live & (perms == np.arange(n)[None, :])).any()):
+                raise PlanValidationError(
+                    "permutation block stage has self-traffic")
+        if (sizes < 0).any() or (sent < 0).any() or \
+                (sent > sizes[:, None] * (1 + rtol)).any():
+            raise PlanValidationError(
+                "permutation stage payload exceeds slot size")
+        if p.slots is not None:
+            slots = np.asarray(p.slots, dtype=np.float64)
+            if slots.shape != (s_count, n):
+                raise PlanValidationError(
+                    f"permutation block has {s_count}x{n} senders but "
+                    f"{slots.shape} slot sizes")
+            if (slots < 0).any() or \
+                    (slots > sizes[:, None] * (1 + rtol)).any():
+                raise PlanValidationError(
+                    "per-sender slot exceeds the stage size")
+            if (sent > slots * (1 + rtol)).any():
+                raise PlanValidationError(
+                    "permutation stage payload exceeds its per-sender slot")
+
     def _check_slot_rail_feasibility(self, rtol: float) -> None:
         """Capacity-aware invariant: within each permutation stage, no rail
         of any live pair needs longer than the stage's window (the slowest
@@ -592,6 +728,9 @@ class Plan:
         shares = (self.nic_shares if self.nic_shares is not None
                   else uniform_nic_shares(topo.n_servers, m))
         for k, p in enumerate(self.phases):
+            if isinstance(p, PermutationBlock):
+                self._check_block_rails(p, k, caps, shares, topo, rtol)
+                continue
             if not isinstance(p, PermutationStage):
                 continue
             src, dst, slot = p.live()
@@ -609,6 +748,41 @@ class Plan:
                     f"{worst:.6g}s to drain its share but the stage window "
                     f"is {window:.6g}s (shares inconsistent with the "
                     "fabric's pair capacities?)")
+
+    def _check_block_rails(self, p: "PermutationBlock", k: int,
+                           caps: np.ndarray, shares: np.ndarray,
+                           topo: Topology, rtol: float) -> None:
+        """Slot-vs-rail feasibility over a whole block in one pass: the
+        same per-stage invariant as the PermutationStage branch, with the
+        per-stage window and worst-rail reductions batched over S stages."""
+        from .topology import bw_div
+
+        s_count, n = p.perms.shape
+        if s_count == 0:
+            return
+        mask, dst, slot = p.live_batch()
+        stage_i, src = np.nonzero(mask)
+        d = dst[stage_i, src]
+        sl = slot[stage_i, src]
+        finite = caps[src, d] > 0
+        stage_i, src, d, sl = (stage_i[finite], src[finite], d[finite],
+                               sl[finite])
+        if src.size == 0:
+            return
+        windows = np.zeros(s_count)
+        np.maximum.at(windows, stage_i, bw_div(sl, caps[src, d]))
+        rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[d])
+        rail_t = bw_div(sl[:, None] * shares[src, d], rail_caps).max(axis=1)
+        worst = np.zeros(s_count)
+        np.maximum.at(worst, stage_i, rail_t)
+        bad = worst > windows * (1 + rtol)
+        if bad.any():
+            b = int(np.flatnonzero(bad)[0])
+            raise PlanValidationError(
+                f"stage {k}[{b}] is slot-vs-rail infeasible: a rail needs "
+                f"{worst[b]:.6g}s to drain its share but the stage window "
+                f"is {windows[b]:.6g}s (shares inconsistent with the "
+                "fabric's pair capacities?)")
 
 
 # -- synthesis caching ----------------------------------------------------

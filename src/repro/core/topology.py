@@ -241,10 +241,17 @@ class Topology:
 
     @property
     def is_homogeneous(self) -> bool:
-        """Identical fabrics, identical NICs, full-bisection spine."""
-        return (len(set(self.fabrics)) == 1
-                and np.all(self.nic_bw == self.nic_bw.flat[0])
-                and self.oversubscription == 1.0)
+        """Identical fabrics, identical NICs, full-bisection spine.
+
+        Memoized: the fabric is frozen, and the serving/repair hot paths
+        consult this on every synthesized plan."""
+        homog = self.__dict__.get("_is_homogeneous")
+        if homog is None:
+            homog = bool(len(set(self.fabrics)) == 1
+                         and np.all(self.nic_bw == self.nic_bw.flat[0])
+                         and self.oversubscription == 1.0)
+            object.__setattr__(self, "_is_homogeneous", homog)
+        return homog
 
     def pair_capacity(self) -> np.ndarray:
         """(n, n) aggregate bandwidth each server pair can sustain.
@@ -289,8 +296,12 @@ class Topology:
                               b_intra=cluster.b_intra,
                               m_gpus=cluster.m_gpus)
         nic = np.full((cluster.n_servers, cluster.m_gpus), cluster.b_inter)
-        return cls(fabrics=(fabric,) * cluster.n_servers, nic_bw=nic,
+        topo = cls(fabrics=(fabric,) * cluster.n_servers, nic_bw=nic,
                    alpha=cluster.alpha)
+        # Homogeneous by construction: seed the memo so per-iteration
+        # consumers (every synthesized plan checks) never recompute it.
+        object.__setattr__(topo, "_is_homogeneous", True)
+        return topo
 
     def cluster_view(self):
         """Nearest ClusterSpec (shape + back-compat scalar fields).

@@ -153,13 +153,32 @@ class Workload:
 
     def server_matrix(self) -> np.ndarray:
         """(n, n) inter-server byte matrix T with zero diagonal."""
-        t, _ = server_reduce(self.matrix, self.cluster.m_gpus)
-        return t
+        return self.reductions()[0]
 
     def intra_bytes(self) -> np.ndarray:
         """S_i: bytes that stay inside each server."""
-        _, s = server_reduce(self.matrix, self.cluster.m_gpus)
-        return s
+        return self.reductions()[1]
+
+    def reductions(self):
+        """Memoized ``(t_server, s_intra, per_gpu_dest)`` for this matrix.
+
+        ``per_gpu_dest`` is the (n, m, n) per-(server, gpu, dest-server)
+        byte sums; the server matrix and intra vector derive from it, so
+        the whole family costs one pass over the GPU matrix.  Memoized
+        because every consumer of a workload re-reduces the same frozen
+        matrix -- fingerprinting, synthesis, warm repair, execution -- and
+        the O(n_gpus^2) pass dwarfs incremental repair itself."""
+        out = self.__dict__.get("_reductions")
+        if out is None:
+            n, m = self.cluster.n_servers, self.cluster.m_gpus
+            per_gpu_dest = self.matrix.reshape(n, m, n, m).sum(axis=3)
+            blocks = per_gpu_dest.sum(axis=1)  # (n, n) incl. diagonal
+            s = np.diag(blocks).copy()
+            t = blocks.copy()
+            np.fill_diagonal(t, 0.0)
+            out = (t, s, per_gpu_dest)
+            object.__setattr__(self, "_reductions", out)
+        return out
 
 
 def server_reduce(w: np.ndarray, m: int):

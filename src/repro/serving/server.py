@@ -47,7 +47,7 @@ from ..core.plan import (
     cluster_family_key,
     traffic_fingerprint,
 )
-from ..core.schedulers import Scheduler, get_scheduler
+from ..core.schedulers import RepairConfig, Scheduler, get_scheduler
 from ..core.traffic import Workload
 from .policy import DriftPredictor, TTLPolicy
 from .queue import (
@@ -100,6 +100,12 @@ class PlanServer:
         ``Scheduler.synthesize_bounded`` on the cold path; None = no
         budget (always exact).
       telemetry: shared Telemetry instance (constructed when omitted).
+      repair_config: warm-repair knobs (``RepairConfig``) handed to
+        ``try_repair_plan`` on the miss path -- the cold-fallback
+        thresholds (residual fraction, stage drift, quality ratchet) and
+        the incremental/one-shot engine switch.  None uses the
+        scheduler's defaults.  Every repair attempt's residual fraction
+        lands in the telemetry ``repair`` histogram.
     """
 
     def __init__(self, cache: Optional[PlanCache] = None, *,
@@ -109,7 +115,8 @@ class PlanServer:
                  prewarm: bool = True,
                  synth_budget_seconds: Optional[float] = None,
                  telemetry: Optional[Telemetry] = None,
-                 predictor: Optional[DriftPredictor] = None):
+                 predictor: Optional[DriftPredictor] = None,
+                 repair_config: Optional[RepairConfig] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.cache = cache if cache is not None else PlanCache(
@@ -122,6 +129,7 @@ class PlanServer:
                     else TTLPolicy(ttl_seconds=ttl))
         self.prewarm = prewarm
         self.synth_budget_seconds = synth_budget_seconds
+        self.repair_config = repair_config
         self.predictor = (predictor if predictor is not None
                           else DriftPredictor())
         self._n_workers = workers
@@ -220,6 +228,9 @@ class PlanServer:
         snap = self.telemetry.snapshot()
         snap["cache"] = self.cache.stats()
         snap["queue"]["depths"] = self.queue.depths()
+        cfg = self.repair_config
+        if cfg is not None:
+            snap["repair"]["config"] = dataclasses.asdict(cfg)
         with self._lock:
             snap["pending_upgrades"] = len(self._inexact)
         return snap
@@ -341,9 +352,17 @@ class PlanServer:
         if prev is not None and hasattr(scheduler, "try_repair_plan") and \
                 prev.cluster == w.cluster and \
                 prev.topo.fingerprint() == w.topo.fingerprint():
-            plan = scheduler.try_repair_plan(prev, w, fingerprint=key)
+            repair_stats: Dict = {}
+            plan = scheduler.try_repair_plan(
+                prev, w, fingerprint=key, config=self.repair_config,
+                stats=repair_stats)
+            if "residual_fraction" in repair_stats:
+                self.telemetry.observe_repair_residual(
+                    repair_stats["residual_fraction"])
             if plan is not None:
                 source, exact = "warm", False
+            else:
+                self.telemetry.count("repair_tripped")
         if plan is None:
             plan, exact = scheduler.synthesize_bounded(
                 w, self.synth_budget_seconds, fingerprint=key)

@@ -16,6 +16,8 @@ section 2):
                                 "max_us"}},
       "synthesis": {"count": int, "seconds_sum": float,
                     "hist": {"<=1e-05s": int, "<=0.0001s": int, ...}},
+      "repair":    {"count": int, "residual_sum": float,
+                    "hist": {"<=0.01": int, ..., ">1": int}},
       "queue":     {"depth": int, "peak_depth": int},
     }
 """
@@ -80,6 +82,13 @@ class LatencyReservoir:
 # paper's small-cluster synthesis scale, minutes the pathological ceiling.
 _SYNTH_EDGES = (1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 100.0)
 
+# Residual-fraction edges for warm repair: how much of each miss's traffic
+# fell outside the previous plan's permutations.  The tail bucket past the
+# default 0.25 bail threshold counts repairs that tripped to cold, so the
+# histogram shows directly whether a deployment's drift fits its
+# RepairConfig.
+_REPAIR_EDGES = (0.01, 0.05, 0.10, 0.25, 0.50, 1.0)
+
 
 class Telemetry:
     """Thread-safe serving metrics with an atomic JSON snapshot."""
@@ -92,6 +101,9 @@ class Telemetry:
         self._synth_hist = [0] * (len(_SYNTH_EDGES) + 1)
         self._synth_count = 0
         self._synth_sum = 0.0
+        self._repair_hist = [0] * (len(_REPAIR_EDGES) + 1)
+        self._repair_count = 0
+        self._repair_sum = 0.0
         self._queue_depth = 0
         self._queue_peak = 0
 
@@ -118,6 +130,15 @@ class Telemetry:
             self._synth_count += 1
             self._synth_sum += float(seconds)
 
+    def observe_repair_residual(self, fraction: float) -> None:
+        """Record one warm-repair attempt's residual fraction (the share
+        of the new matrix that fell outside the previous plan's slots)."""
+        with self._lock:
+            i = int(np.searchsorted(_REPAIR_EDGES, fraction))
+            self._repair_hist[i] += 1
+            self._repair_count += 1
+            self._repair_sum += float(fraction)
+
     def observe_queue_depth(self, depth: int) -> None:
         with self._lock:
             self._queue_depth = int(depth)
@@ -138,6 +159,12 @@ class Telemetry:
                          if i < len(_SYNTH_EDGES)
                          else f">{_SYNTH_EDGES[-1]:g}s")
                 hist[label] = count
+            repair_hist = {}
+            for i, count in enumerate(self._repair_hist):
+                label = (f"<={_REPAIR_EDGES[i]:g}"
+                         if i < len(_REPAIR_EDGES)
+                         else f">{_REPAIR_EDGES[-1]:g}")
+                repair_hist[label] = count
             return {
                 "counters": dict(self._counters),
                 "latency": {name: res.summary_us()
@@ -145,6 +172,9 @@ class Telemetry:
                 "synthesis": {"count": self._synth_count,
                               "seconds_sum": self._synth_sum,
                               "hist": hist},
+                "repair": {"count": self._repair_count,
+                           "residual_sum": self._repair_sum,
+                           "hist": repair_hist},
                 "queue": {"depth": self._queue_depth,
                           "peak_depth": self._queue_peak},
             }

@@ -48,6 +48,16 @@ regressions in the guarded series.  Three kinds of budget:
     absolute p99 ceiling (a whole synthesis in the tail is expected; a
     deadlocked or serialized daemon is not).
 
+  * **Fault guards** (``FAULT_*``): the ``fault.*`` rows (fig_fault)
+    guard the fabric-event pipeline.  The issue-8 acceptance bars:
+    every plan served inside a NIC-failure event window completes within
+    ``FAULT_RECOVERY_RATIO_MAX`` of a cold synthesis on the degraded
+    fabric (observed ~1.06: topology-change repair re-water-fills the
+    old structure against the new pair capacities), zero stalls
+    (rejected/shed/errors/inline fallbacks) across the whole run, and at
+    least one family actually re-repaired (a zero means the event walk
+    silently stopped finding families and every answer went cold).
+
 Usage:  python -m benchmarks.check_synth_budget BENCH_ci.json
 """
 
@@ -102,6 +112,11 @@ SERVE_P50_MAX_RATIO = 10.0    # issue-6 bar: p50 / exec_us; observed ~4x
 SERVE_P99_CEILING_US = 500_000.0  # tail = one synthesis; observed ~15ms
 SERVE_HIT_RATE_FLOOR = 0.5    # repeat-heavy trajectory; observed ~0.94
 SERVE_UPGRADES_FLOOR = 1      # background upgrades must actually land
+
+# Fabric-event fault tolerance (fig_fault) acceptance bars.
+FAULT_RECOVERY_RATIO_MAX = 2.0  # issue-8 bar: served vs cold on the
+                                # degraded fabric; observed ~1.06
+FAULT_REREPAIRED_FLOOR = 1      # the event walk must re-repair something
 
 
 def check(path: str) -> int:
@@ -175,6 +190,7 @@ def check(path: str) -> int:
                   f">= {floor:.0f}x")
     status |= _check_synth_amortized(records)
     status |= _check_serving(records)
+    status |= _check_fault(records)
     return status
 
 
@@ -266,6 +282,47 @@ def _check_serving(records) -> int:
             status = 1
         else:
             print("ok   serve.upgrades: post-drain plan parity holds")
+    return status
+
+
+def _check_fault(records) -> int:
+    """The fig_fault rows: bounded slowdown, zero stalls, live re-repair."""
+    status = 0
+    ratio = records.get("fault.recovery_ratio")
+    if ratio is None:
+        print("FAIL fault.recovery_ratio: missing (benchmark renamed or "
+              "skipped?)")
+        status = 1
+    else:
+        value = float(ratio["us_per_call"])
+        if value > FAULT_RECOVERY_RATIO_MAX:
+            print(f"FAIL fault.recovery_ratio: {value:.2f}x cold synthesis "
+                  f"on the degraded fabric "
+                  f"(> {FAULT_RECOVERY_RATIO_MAX:.1f}x budget)")
+            status = 1
+        else:
+            print(f"ok   fault.recovery_ratio: {value:.2f}x "
+                  f"<= {FAULT_RECOVERY_RATIO_MAX:.1f}x")
+        rerepaired = ratio.get("derived", {}).get("rerepaired")
+        if rerepaired is None or int(rerepaired) < FAULT_REREPAIRED_FLOOR:
+            print(f"FAIL fault.recovery_ratio: rerepaired="
+                  f"{rerepaired!r} (< {FAULT_REREPAIRED_FLOOR} floor; the "
+                  "event walk found no families to repair)")
+            status = 1
+        else:
+            print(f"ok   fault.recovery_ratio: rerepaired={rerepaired} "
+                  f">= {FAULT_REREPAIRED_FLOOR}")
+    stalls = records.get("fault.stalls")
+    if stalls is None:
+        print("FAIL fault.stalls: missing (benchmark renamed or skipped?)")
+        status = 1
+    elif float(stalls["us_per_call"]) != 0:
+        print(f"FAIL fault.stalls: {stalls['us_per_call']} requests "
+              f"stalled/rejected during the fault run "
+              f"({stalls['derived_raw']})")
+        status = 1
+    else:
+        print("ok   fault.stalls: 0 across the event window")
     return status
 
 

@@ -1,0 +1,111 @@
+"""Fault injection against the plan-serving daemon (repro.serving.events).
+
+Issue-8 acceptance scenario: a NIC fails in the middle of a drifting-MoE
+serving run and the daemon must *degrade*, never stall.  One client
+replays the fig_dynamic drift trajectory in three acts over an 8x8
+fabric: a healthy warmup, an event window opened by ``fail nic 0.0``
+(every request still carrying the pre-event Topology, so the server's
+re-homing and family re-repair both run on the hot path), and a recovery
+tail after the inverse ``recover`` event.  Series:
+
+  fault.recovery_ratio  worst served/cold completion ratio inside the
+                 event window: each served plan is executed on the
+                 degraded fabric and compared against a from-scratch
+                 cold synthesis for the same traffic on that fabric.
+                 The issue-8 bar is <= 2x (observed ~1.0: topology-change
+                 repair re-water-fills the old structure against the new
+                 pair capacities and lands within a percent of cold).
+                 Derived columns carry the re-repair counters and the
+                 wall time of applying the event (the family walk).
+  fault.stalls   rejected + shed + errors + client inline fallbacks
+                 across the whole run (value column is the count).  The
+                 issue-8 bar is exactly 0: a fabric event must never
+                 surface to clients as anything but a answered request.
+
+Guarded in check_synth_budget.py (FAULT_*).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import ClusterSpec, Topology, execute_plan, get_scheduler
+from repro.core.traffic import Workload
+from repro.serving import FabricMonitor, PlanClient, PlanServer, TieredQueue
+
+from .common import Csv
+from .fig_dynamic import _drift_trajectory
+
+_N, _M = 8, 8
+_TRAJ_STEPS = 24
+_ALGO = "flash_ca"
+
+
+def run(csv: Csv):
+    cluster = ClusterSpec(n_servers=_N, m_gpus=_M)
+    topo0 = _drift_trajectory(cluster, 1, seed=11)[0].topo
+    mon = FabricMonitor(topo0)
+    # Clients keep the ORIGINAL fabric throughout: the server must re-home.
+    traj = [Workload(cluster, w.matrix, topo0)
+            for w in _drift_trajectory(cluster, _TRAJ_STEPS, seed=11)]
+    third = _TRAJ_STEPS // 3
+
+    queue = TieredQueue(max_depth=4096, stale_after=None)
+    cold_memo = {}
+    scheduler = get_scheduler(_ALGO)
+
+    def cold_time(w):
+        sig = w.matrix.tobytes()
+        if sig not in cold_memo:
+            cold_memo[sig] = execute_plan(scheduler.synthesize(w),
+                                          w).completion_time
+        return cold_memo[sig]
+
+    worst_ratio = 0.0
+    with PlanServer(workers=2, queue=queue) as server:
+        server.attach_monitor(mon)
+        client = PlanClient(server, algorithm=_ALGO, timeout=120.0)
+
+        for w in traj[:third]:                       # act 1: healthy
+            client.get_plan(w)
+        server.drain(60.0)
+
+        t0 = time.perf_counter()
+        mon.inject("fail", server=0, nic=0)          # act 2: the fault
+        event_apply_us = (time.perf_counter() - t0) * 1e6
+        degraded = mon.current()
+        for w in traj[third:2 * third]:              # event window
+            answer = client.get_plan(w)
+            w_deg = Workload(cluster, w.matrix, degraded)
+            served = execute_plan(answer.plan, w_deg).completion_time
+            worst_ratio = max(worst_ratio, served / cold_time(w_deg))
+        server.drain(60.0)
+
+        mon.inject("recover", server=0, nic=0)       # act 3: the heal
+        assert mon.current() == topo0
+        for w in traj[2 * third:]:
+            client.get_plan(w)
+        drained = server.drain(60.0)
+        snap = server.telemetry_snapshot()
+
+    c = snap["counters"]
+    stalls = (c.get("rejected", 0) + c.get("shed", 0) + c.get("errors", 0)
+              + client.counters["inline"])
+    csv.emit("fault.recovery_ratio", worst_ratio,
+             f"rerepaired={c.get('rerepaired', 0)}"
+             f"|rerepair_cold={c.get('rerepair_cold', 0)}"
+             f"|stale_topology={c.get('stale_topology', 0)}"
+             f"|event_apply_us={event_apply_us:.1f}"
+             f"|fabric_events={c.get('fabric_events', 0)}")
+    csv.emit("fault.stalls", stalls,
+             f"rejected={c.get('rejected', 0)}|shed={c.get('shed', 0)}"
+             f"|errors={c.get('errors', 0)}"
+             f"|inline={client.counters['inline']}"
+             f"|requests={c.get('requests', 0)}"
+             f"|worker_deaths={c.get('worker_deaths', 0)}"
+             f"|drained={drained}")
+
+
+if __name__ == "__main__":
+    csv = Csv()
+    run(csv)

@@ -12,6 +12,7 @@ so successive runs accumulate a perf trajectory.  Modules:
   hetero heterogeneous fabrics: degraded/failed/mixed NICs, oversubscription
   dynamic  drifting-MoE serving loop: cache + warm start + compiled executor
   serving  closed-loop concurrent load on the plan-serving daemon
+  fault    mid-run NIC failure: fabric events, re-repair, bounded slowdown
   roofline  per-(arch x shape x mesh) terms from the dry-run sweep
 """
 
@@ -27,6 +28,7 @@ from . import (
     fig16_topo,
     fig17_overhead,
     fig_dynamic,
+    fig_fault,
     fig_hetero,
     fig_serving,
     roofline_table,
@@ -36,7 +38,7 @@ from .common import Csv
 
 MODULES = (fig12_algbw, fig13_skew, fig14_moe_e2e, fig15_scale,
            fig16_topo, fig17_overhead, fig_hetero, fig_dynamic,
-           fig_serving, roofline_table)
+           fig_serving, fig_fault, roofline_table)
 
 
 def main(argv=None) -> None:

@@ -43,7 +43,7 @@ import dataclasses
 import hashlib
 import threading
 from collections import OrderedDict
-from typing import Any, ClassVar, Dict, Optional, Tuple
+from typing import Any, ClassVar, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -739,7 +739,7 @@ class Plan:
             if src.size == 0:
                 continue
             window = float(bw_div(slot, caps[src, dst]).max(initial=0.0))
-            rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[dst])
+            rail_caps = np.minimum(topo.nic_tx[src], topo.nic_rx[dst])
             rail_t = bw_div(slot[:, None] * shares[src, dst], rail_caps)
             worst = float(rail_t.max(initial=0.0))
             if worst > window * (1 + rtol):
@@ -771,7 +771,7 @@ class Plan:
             return
         windows = np.zeros(s_count)
         np.maximum.at(windows, stage_i, bw_div(sl, caps[src, d]))
-        rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[d])
+        rail_caps = np.minimum(topo.nic_tx[src], topo.nic_rx[d])
         rail_t = bw_div(sl[:, None] * shares[src, d], rail_caps).max(axis=1)
         worst = np.zeros(s_count)
         np.maximum.at(worst, stage_i, rail_t)
@@ -974,6 +974,17 @@ class PlanCache:
         with self._lock:
             key = self._family.get(family)
             return self._store.get(key) if key is not None else None
+
+    def family_heads(self) -> List[Tuple[str, Plan]]:
+        """Snapshot of every family's canonical (MRU) plan: ``(family
+        key, plan)`` pairs.  The fabric-event pipeline walks this to find
+        the plan families a topology change affects (those whose plan
+        carries the pre-event fabric fingerprint) and re-repair each one
+        against the new capacities instead of letting it go cold."""
+        with self._lock:
+            return [(family, self._store[key])
+                    for family, key in self._family.items()
+                    if key in self._store]
 
     def evict(self, key: str) -> bool:
         """Drop one entry (and its family-index membership) by exact key.

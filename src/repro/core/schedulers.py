@@ -204,6 +204,26 @@ class RepairConfig:
     headroom: float = 0.5
     incremental: bool = True
 
+    def for_topology_change(self) -> "RepairConfig":
+        """Relaxed copy for cross-fabric re-repair (fault events).
+
+        The quality ratchet prices drift against a *fixed* fabric's lower
+        bound; after a degrade/fail event the old stage structure is
+        necessarily a little off the new fabric's optimum, and the serving
+        contract is degraded-but-valid-now with an exact re-synthesis
+        upgrading it in the background.  Floor the ratchet so a bounded
+        mismatch does not force every family cold at once."""
+        floor = TOPOLOGY_CHANGE_QUALITY_RATCHET
+        if self.quality_ratchet >= floor:
+            return self
+        return dataclasses.replace(self, quality_ratchet=floor)
+
+
+# A re-repaired plan may run up to this multiple of the new fabric's exact
+# lower bound before the repair is rejected as not-worth-keeping (the
+# fig_fault CI guard asserts the *measured* post-event completion stays
+# well inside this against a cold synthesis on the degraded fabric).
+TOPOLOGY_CHANGE_QUALITY_RATCHET = 1.75
 
 DEFAULT_REPAIR_CONFIG = RepairConfig()
 
@@ -368,7 +388,8 @@ class FlashScheduler(Scheduler):
     def try_repair_plan(self, prev: Plan, w: Workload,
                         fingerprint: Optional[str] = None, *,
                         config: Optional[RepairConfig] = None,
-                        stats: Optional[dict] = None) -> Optional[Plan]:
+                        stats: Optional[dict] = None,
+                        topology_change: bool = False) -> Optional[Plan]:
         """Warm-started re-synthesis: seed the new plan with the previous
         plan's permutations instead of a cold Birkhoff decomposition.
 
@@ -396,18 +417,39 @@ class FlashScheduler(Scheduler):
         cold-synthesize): too much traffic falls outside the old
         permutations, chained repairs would drift far past the Birkhoff
         stage bound, or the incremental quality ratchet tripped.
+
+        ``topology_change=True`` relaxes the fabric-fingerprint match for
+        fault-tolerant re-repair: ``prev`` was synthesized on a different
+        (pre-event) topology of the same shape, and its stage structure is
+        re-repaired against ``w.topo``'s *new* pair capacities -- the
+        carried delta state is discarded (its water-fill thresholds embed
+        the old fabric's capacities) and rebuilt fresh from the plan's
+        phases, so shares, slots and validation all reflect the degraded
+        or recovered fabric.
         """
         if prev.algorithm != self.name:
             raise ValueError(
                 f"cannot warm-start {self.name!r} from a {prev.algorithm!r} "
                 "plan")
-        if prev.cluster != w.cluster or \
+        if prev.cluster != w.cluster:
+            raise ValueError(
+                "warm-start requires the previous plan's cluster to match "
+                "the new workload's")
+        if not topology_change and \
                 prev.topo.fingerprint() != w.topo.fingerprint():
             raise ValueError(
                 "warm-start requires the previous plan's (cluster, "
-                "topology) to match the new workload's fabric")
+                "topology) to match the new workload's fabric; pass "
+                "topology_change=True to re-repair across a fabric event")
         cfg = config if config is not None else \
             (self.repair_config or DEFAULT_REPAIR_CONFIG)
+        if topology_change:
+            # Any carried state is priced in the old fabric's capacities;
+            # drop it so neither this repair nor a later claim reuses it.
+            prev.__dict__.pop(_STATE_ATTR, None)
+            cfg = cfg.for_topology_change()
+            if stats is not None:
+                stats["topology_change"] = True
         # Like fingerprint hashing (see _build_plan), the O(gpu-matrix)
         # reduction is input normalization shared with execution and
         # fingerprinting, not synthesis: memoized on the workload and kept

@@ -159,7 +159,7 @@ def _perm_stage_time(topo: Topology, ph: PermutationStage,
     src, dst, slot = ph.live()
     if src.size == 0:
         return 0.0
-    rail_caps = np.minimum(topo.nic_bw[src], topo.nic_bw[dst])  # (k, m)
+    rail_caps = np.minimum(topo.nic_tx[src], topo.nic_rx[dst])  # (k, m)
     flows = slot[:, None] * shares[src, dst]                    # (k, m)
     spine_bytes = (ph.size * len(src) if ph.slots is None  # exact blind form
                    else float(slot.sum()))
@@ -225,7 +225,7 @@ def _fanout_time(topo: Topology, ph: FanOutBurst) -> float:
     """One burst: receiver NICs fair-share + incast; sender uplinks bound;
     intra traffic rides each server's fabric concurrently; one wakeup."""
     n, m = topo.n_servers, topo.m_gpus
-    nic = topo.nic_bw
+    nic = topo.nic_rx  # inbound fair-share + incast ride the receive plane
     blk = ph.matrix.reshape(n, m, n, m)
     # Zero the same-server sender rows per receiver: intra rides the fast
     # fabric, not the NIC.
@@ -245,7 +245,7 @@ def _fanout_time(topo: Topology, ph: FanOutBurst) -> float:
     t = float(base.max(initial=0.0))
     # Sender uplinks (no incast on the send side).
     outbound = inter_flows.sum(axis=(2, 3))          # (n, m) per sender NIC
-    t = max(t, float(_div(outbound, nic).max(initial=0.0)))
+    t = max(t, float(_div(outbound, topo.nic_tx).max(initial=0.0)))
     # Intra traffic rides each server's fabric concurrently.
     intra_per_gpu = np.einsum("agah->ag", blk)       # (n, m)
     t = max(t, float(_div(intra_per_gpu,
@@ -264,8 +264,8 @@ def _barrier_time(topo: Topology, ph: BarrierStage) -> float:
     src_s, src_g = src // m, src % m
     dst_s, dst_g = dst // m, dst % m
     same = src_s == dst_s
-    inter_caps = np.minimum(topo.nic_bw[src_s, src_g],
-                            topo.nic_bw[dst_s, dst_g])
+    inter_caps = np.minimum(topo.nic_tx[src_s, src_g],
+                            topo.nic_rx[dst_s, dst_g])
     bw = np.where(same, topo.intra_path_bw[src_s], inter_caps)
     stage = float(_div(ph.sizes, bw).max(initial=0.0))
     spine = _sdiv(float(ph.sizes[~same].sum()), topo.spine_bandwidth)
@@ -305,8 +305,8 @@ def _simple_phase_time(topo: Topology, ph, last_stage, add) -> int:
         add("inter", _fanout_time(topo, ph))
         return 1
     if isinstance(ph, RailStage):
-        rail = max(float(_div(ph.send, topo.nic_bw).max(initial=0.0)),
-                   float(_div(ph.recv, topo.nic_bw).max(initial=0.0)))
+        rail = max(float(_div(ph.send, topo.nic_tx).max(initial=0.0)),
+                   float(_div(ph.recv, topo.nic_rx).max(initial=0.0)))
         spine = _sdiv(float(ph.send.sum()), topo.spine_bandwidth)
         add("inter", max(rail, spine))
         add("sync", topo.alpha * max(ph.n_rounds, 1))
@@ -563,7 +563,7 @@ def _compiled_perm_group(topo: Topology, perms: np.ndarray,
     mask, dst, slot2d = live_slots_batch(perms, slot2d)
     live_count = mask.sum(axis=1)
 
-    nic = topo.nic_bw
+    tx, rx = topo.nic_tx, topo.nic_rx
     a2a = topo.intra_a2a_bw
     rows_idx = np.arange(n)
     times = np.empty(s_count)
@@ -573,7 +573,7 @@ def _compiled_perm_group(topo: Topology, perms: np.ndarray,
         hi = min(s_count, lo + block)
         p_blk = dst[lo:hi]                                   # (b, n)
         sl_blk = slot2d[lo:hi]                               # (b, n)
-        rail_caps = np.minimum(nic[None, :, :], nic[p_blk])  # (b, n, m)
+        rail_caps = np.minimum(tx[None, :, :], rx[p_blk])    # (b, n, m)
         flows = sl_blk[:, :, None] * shares[rows_idx[None, :], p_blk]
         times[lo:hi] = _div(flows, rail_caps).max(axis=(1, 2), initial=0.0)
         redis[lo:hi] = _div(sl_blk / m, a2a[p_blk]).max(axis=1, initial=0.0)
@@ -638,8 +638,8 @@ def compile_plan(plan: Plan, topology: Optional[Topology] = None
         src_s, src_g = src // m, src % m
         dst_s, dst_g = dsts // m, dsts % m
         same = dst_s == src_s[None, :]
-        caps = np.minimum(topo.nic_bw[src_s, src_g][None, :],
-                          topo.nic_bw[dst_s, dst_g])
+        caps = np.minimum(topo.nic_tx[src_s, src_g][None, :],
+                          topo.nic_rx[dst_s, dst_g])
         bw = np.where(same, topo.intra_path_bw[src_s][None, :], caps)
         stage_t = _div(flows, bw).max(axis=1, initial=0.0)
         spine_t = _div(np.where(same, 0.0, flows).sum(axis=1),

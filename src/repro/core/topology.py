@@ -144,18 +144,33 @@ class Topology:
 
     Attributes:
       fabrics: one ``ServerFabric`` per server.
-      nic_bw: (n_servers, m_gpus) per-NIC bandwidth, bytes/s.  Uplink =
-        downlink (full duplex, paper assumption (1)).  Zero = failed link.
+      nic_bw: (n_servers, m_gpus) per-NIC *transmit* bandwidth, bytes/s.
+        Zero = failed link.  With ``nic_bw_rx`` unset this is also the
+        receive rate (full duplex, paper assumption (1)).
       alpha: per-stage wakeup latency (alpha-beta model, paper 6.3).
       oversubscription: scale-out fabric factor >= 1; the spine carries at
         most ``sum(nic_bw) / oversubscription`` bytes/s per direction.
         1.0 = full bisection (no effect).
+      nic_bw_rx: optional (n_servers, m_gpus) per-NIC *receive* bandwidth
+        for asymmetric up/down rates (a congested downlink, a degraded
+        receive pipeline).  None = symmetric (receive mirrors ``nic_bw``);
+        an array equal to ``nic_bw`` is normalized back to None so the
+        fingerprint of a symmetric fabric is representation-independent.
+      nominal_nic_bw / nominal_nic_rx: pre-degradation rates captured by
+        the first degrade/fail constructor so ``recover_nic`` can restore
+        them.  Bookkeeping only: excluded from ``fingerprint()``/``__eq__``
+        (two fabrics with identical live rates schedule identically) and
+        dropped automatically once every link is back at nominal, so
+        ``t.fail_nic(s, g).recover_nic(s, g)`` *is* ``t``.
     """
 
     fabrics: Tuple[ServerFabric, ...]
     nic_bw: np.ndarray
     alpha: float = 10e-6
     oversubscription: float = 1.0
+    nic_bw_rx: Optional[np.ndarray] = None
+    nominal_nic_bw: Optional[np.ndarray] = None
+    nominal_nic_rx: Optional[np.ndarray] = None
 
     def __post_init__(self):
         # Defensive copy + freeze: fingerprint()/__hash__ key PlanCache
@@ -182,16 +197,52 @@ class Topology:
         if self.oversubscription < 1.0:
             raise ValueError(
                 f"oversubscription must be >= 1, got {self.oversubscription}")
+        rx = self._freeze_optional("nic_bw_rx", nic.shape)
+        if rx is not None and np.array_equal(rx, nic):
+            # Symmetric-by-value fabrics normalize to the symmetric
+            # representation so fingerprints cannot fork on how the same
+            # rates were spelled.
+            object.__setattr__(self, "nic_bw_rx", None)
+            rx = None
+        if rx is not None and np.any(rx < 0):
+            raise ValueError("NIC bandwidths must be >= 0")
+        nom_tx = self._freeze_optional("nominal_nic_bw", nic.shape)
+        nom_rx = self._freeze_optional("nominal_nic_rx", nic.shape)
+        if nom_tx is not None:
+            eff_rx = rx if rx is not None else nic
+            eff_nom_rx = nom_rx if nom_rx is not None else nom_tx
+            if np.array_equal(nom_tx, nic) and np.array_equal(
+                    eff_nom_rx, eff_rx):
+                # Fully recovered: the nominal bookkeeping is spent.
+                object.__setattr__(self, "nominal_nic_bw", None)
+                object.__setattr__(self, "nominal_nic_rx", None)
+        elif nom_rx is not None:
+            raise ValueError("nominal_nic_rx requires nominal_nic_bw")
         # Derived per-resource capacities, computed once (the executor reads
         # them several times per plan); frozen like nic_bw.
+        recv = self.nic_bw_rx if self.nic_bw_rx is not None else nic
         for attr, arr in (
                 ("_send_caps", nic.sum(axis=1)),
+                ("_recv_caps", recv.sum(axis=1)),
                 ("_intra_path_bw",
                  np.array([f.path_bandwidth() for f in self.fabrics])),
                 ("_intra_a2a_bw",
                  np.array([f.a2a_bandwidth() for f in self.fabrics]))):
             arr.flags.writeable = False
             object.__setattr__(self, attr, arr)
+
+    def _freeze_optional(self, attr: str,
+                         shape: Tuple[int, int]) -> Optional[np.ndarray]:
+        arr = getattr(self, attr)
+        if arr is None:
+            return None
+        arr = np.array(arr, dtype=np.float64, order="C", copy=True)
+        if arr.shape != shape:
+            raise ValueError(f"{attr} shape {arr.shape} != nic_bw "
+                             f"shape {shape}")
+        arr.flags.writeable = False
+        object.__setattr__(self, attr, arr)
+        return arr
 
     # -- shape ----------------------------------------------------------
 
@@ -210,14 +261,44 @@ class Topology:
     # -- derived link-level capacities ----------------------------------
 
     @property
+    def nic_tx(self) -> np.ndarray:
+        """(n, m) per-NIC transmit bandwidth (alias of ``nic_bw``)."""
+        return self.nic_bw
+
+    @property
+    def nic_rx(self) -> np.ndarray:
+        """(n, m) per-NIC receive bandwidth; ``nic_bw`` when symmetric.
+
+        Returns the *same array object* as ``nic_bw`` on symmetric
+        fabrics, so executor hot paths that hoist both planes pay nothing
+        extra there."""
+        return self.nic_bw_rx if self.nic_bw_rx is not None else self.nic_bw
+
+    @property
+    def is_symmetric(self) -> bool:
+        """True when receive rates mirror transmit rates everywhere."""
+        return self.nic_bw_rx is None
+
+    @property
     def send_caps(self) -> np.ndarray:
-        """(n_servers,) aggregate NIC capacity per server, one direction."""
+        """(n_servers,) aggregate NIC transmit capacity per server."""
         return self._send_caps
 
     @property
+    def recv_caps(self) -> np.ndarray:
+        """(n_servers,) aggregate NIC receive capacity per server."""
+        return self._recv_caps
+
+    @property
     def spine_bandwidth(self) -> float:
-        """Aggregate cross-fabric bandwidth per direction (scale-out tier)."""
-        return float(self.nic_bw.sum()) / self.oversubscription
+        """Aggregate cross-fabric bandwidth per direction (scale-out tier).
+
+        Under asymmetric rates the spine can move no more than the slower
+        of what the servers can collectively inject or drain."""
+        cap = float(self.nic_bw.sum())
+        if self.nic_bw_rx is not None:
+            cap = min(cap, float(self.nic_bw_rx.sum()))
+        return cap / self.oversubscription
 
     @property
     def intra_path_bw(self) -> np.ndarray:
@@ -233,9 +314,17 @@ class Topology:
         """Theorem 1 lower bound on this fabric: each server's max(row, col)
         line sum over its aggregate NIC capacity, and the whole exchange
         over the spine.  Single source of truth for the BoundStage executor
-        branch and ``optimal_completion_time``."""
-        per_server = bw_div(np.asarray(line_sums, dtype=np.float64),
-                            self.send_caps)
+        branch and ``optimal_completion_time``.
+
+        Under asymmetric rates the combined line sum is charged against
+        ``max(send_caps, recv_caps)`` per server -- still a valid lower
+        bound, since ``max(row, col) / max(tx, rx)`` never exceeds
+        ``max(row / tx, col / rx)`` -- and degrades to the exact symmetric
+        form when the planes coincide."""
+        caps = self.send_caps
+        if self.nic_bw_rx is not None:
+            caps = np.maximum(caps, self.recv_caps)
+        per_server = bw_div(np.asarray(line_sums, dtype=np.float64), caps)
         return max(float(per_server.max(initial=0.0)),
                    bw_sdiv(float(inter_total), self.spine_bandwidth))
 
@@ -248,6 +337,7 @@ class Topology:
         homog = self.__dict__.get("_is_homogeneous")
         if homog is None:
             homog = bool(len(set(self.fabrics)) == 1
+                         and self.nic_bw_rx is None
                          and np.all(self.nic_bw == self.nic_bw.flat[0])
                          and self.oversubscription == 1.0)
             object.__setattr__(self, "_is_homogeneous", homog)
@@ -264,9 +354,14 @@ class Topology:
         is the per-edge weight of the capacity-aware Birkhoff synthesis
         (``birkhoff_decompose(..., capacity_aware=True)``) and the
         denominator of its time-domain traffic matrix.
+
+        Rail g of the pair moves data from the source NIC's *transmit*
+        plane into the destination NIC's *receive* plane, so under
+        asymmetric rates the matrix is ``sum_g min(tx[src, g],
+        rx[dst, g])`` and need not be symmetric.
         """
-        caps = np.minimum(self.nic_bw[:, None, :],
-                          self.nic_bw[None, :, :]).sum(axis=-1)
+        caps = np.minimum(self.nic_tx[:, None, :],
+                          self.nic_rx[None, :, :]).sum(axis=-1)
         np.fill_diagonal(caps, 0.0)
         return caps
 
@@ -281,7 +376,7 @@ class Topology:
         traffic routes around it), uniform fallback for a fully
         disconnected pair."""
         n, m = self.nic_bw.shape
-        caps = np.minimum(self.nic_bw[:, None, :], self.nic_bw[None, :, :])
+        caps = np.minimum(self.nic_tx[:, None, :], self.nic_rx[None, :, :])
         tot = caps.sum(axis=-1, keepdims=True)
         shares = np.full((n, n, m), 1.0 / m)
         np.divide(caps, tot, out=shares, where=tot > 0)
@@ -335,29 +430,114 @@ class Topology:
                    nic_bw=np.full((n_servers, m_gpus), b_inter),
                    alpha=alpha)
 
-    def with_nic_bw(self, nic_bw) -> "Topology":
-        return dataclasses.replace(self, nic_bw=np.asarray(nic_bw))
+    _KEEP = object()  # sentinel: "leave this plane as it is"
 
-    def degrade_nic(self, server: int, nic: int,
-                    factor: float) -> "Topology":
-        """One NIC running at ``factor`` of its nominal speed (0 = failed)."""
+    def with_nic_bw(self, nic_bw, *, nic_bw_rx=_KEEP,
+                    keep_nominal: bool = False) -> "Topology":
+        """New transmit (and optionally receive) rates.
+
+        A plain call defines a *new fabric*: any recovery bookkeeping is
+        dropped.  The degrade/fail/recover constructors pass
+        ``keep_nominal=True`` so the pre-degradation rates survive the
+        edit (captured from the current rates on the first degradation).
+        """
+        if nic_bw_rx is Topology._KEEP:
+            nic_bw_rx = self.nic_bw_rx
+        if keep_nominal:
+            nom_tx = (self.nominal_nic_bw if self.nominal_nic_bw is not None
+                      else self.nic_bw)
+            nom_rx = (self.nominal_nic_rx if self.nominal_nic_bw is not None
+                      else self.nic_bw_rx)
+        else:
+            nom_tx = nom_rx = None
+        return dataclasses.replace(
+            self, nic_bw=np.asarray(nic_bw), nic_bw_rx=nic_bw_rx,
+            nominal_nic_bw=nom_tx, nominal_nic_rx=nom_rx)
+
+    def with_nic_rx(self, nic_bw_rx) -> "Topology":
+        """Asymmetric up/down rates: override the receive plane only."""
+        return self.with_nic_bw(self.nic_bw, nic_bw_rx=np.asarray(nic_bw_rx))
+
+    @staticmethod
+    def _check_direction(direction: str) -> None:
+        if direction not in ("both", "up", "down"):
+            raise ValueError(
+                f"direction must be 'both', 'up' or 'down', got {direction!r}")
+
+    def _scale(self, sel, factor: float, direction: str) -> "Topology":
+        """Scale one NIC (or a whole server row) in the named plane(s),
+        preserving the nominal rates for a later ``recover_nic``."""
+        tx = self.nic_bw
+        rx = self.nic_bw_rx
+        if direction != "both" and rx is None:
+            # A single-plane edit on a symmetric fabric forks the planes:
+            # the untouched plane must keep its current rate, so the
+            # receive mirror becomes explicit first.  'both' keeps
+            # symmetric fabrics symmetric (rx stays an implicit mirror).
+            rx = np.array(tx)
+        if direction in ("up", "both"):
+            tx = tx.copy()
+            tx[sel] *= factor
+        if direction in ("down", "both") and rx is not None:
+            rx = np.array(rx)
+            rx[sel] *= factor
+        return self.with_nic_bw(tx, nic_bw_rx=rx, keep_nominal=True)
+
+    def degrade_nic(self, server: int, nic: int, factor: float,
+                    direction: str = "both") -> "Topology":
+        """One NIC running at ``factor`` of its nominal speed (0 = failed).
+
+        ``direction`` selects the plane: ``"both"`` (default), ``"up"``
+        (transmit only) or ``"down"`` (receive only) for asymmetric
+        up/down degradation scenarios."""
         if not 0.0 <= factor <= 1.0:
             raise ValueError(f"degrade factor must be in [0, 1], got {factor}")
-        nic_bw = self.nic_bw.copy()
-        nic_bw[server, nic] *= factor
-        return self.with_nic_bw(nic_bw)
+        self._check_direction(direction)
+        return self._scale((server, nic), factor, direction)
 
-    def fail_nic(self, server: int, nic: int) -> "Topology":
-        return self.degrade_nic(server, nic, 0.0)
+    def fail_nic(self, server: int, nic: int,
+                 direction: str = "both") -> "Topology":
+        return self.degrade_nic(server, nic, 0.0, direction)
 
-    def degrade_server(self, server: int, factor: float) -> "Topology":
+    def degrade_server(self, server: int, factor: float,
+                       direction: str = "both") -> "Topology":
         """Every NIC of one server at ``factor`` of nominal (thermal
         throttling, PCIe fault): the whole server becomes a slow rail set."""
         if not 0.0 <= factor <= 1.0:
             raise ValueError(f"degrade factor must be in [0, 1], got {factor}")
-        nic_bw = self.nic_bw.copy()
-        nic_bw[server] *= factor
-        return self.with_nic_bw(nic_bw)
+        self._check_direction(direction)
+        return self._scale(server, factor, direction)
+
+    def fail_server(self, server: int,
+                    direction: str = "both") -> "Topology":
+        """Whole server off the fabric (power loss, kernel panic)."""
+        return self.degrade_server(server, 0.0, direction)
+
+    def recover_nic(self, server: int, nic: int) -> "Topology":
+        """Inverse of degrade/fail: one NIC back at its pre-degradation
+        rate (both planes).  A no-op when nothing was degraded through the
+        scenario constructors; once every link is nominal again the
+        recovered topology compares and fingerprints equal to the
+        original."""
+        return self._restore((server, nic))
+
+    def recover_server(self, server: int) -> "Topology":
+        """Every NIC of one server back at its pre-degradation rate."""
+        return self._restore(server)
+
+    def _restore(self, sel) -> "Topology":
+        nom_tx = self.nominal_nic_bw
+        if nom_tx is None:
+            return self  # nothing recorded as degraded
+        tx = self.nic_bw.copy()
+        tx[sel] = nom_tx[sel]
+        rx = self.nic_bw_rx
+        if rx is not None:
+            nom_rx = (self.nominal_nic_rx if self.nominal_nic_rx is not None
+                      else nom_tx)
+            rx = rx.copy()
+            rx[sel] = nom_rx[sel]
+        return self.with_nic_bw(tx, nic_bw_rx=rx, keep_nominal=True)
 
     def with_oversubscription(self, factor: float) -> "Topology":
         return dataclasses.replace(self, oversubscription=float(factor))
@@ -369,7 +549,7 @@ class Topology:
                 f"need {self.n_servers} per-server speeds, got {len(speeds)}")
         nic_bw = np.tile(np.asarray(speeds, dtype=np.float64)[:, None],
                          (1, self.m_gpus))
-        return self.with_nic_bw(nic_bw)
+        return self.with_nic_bw(nic_bw, nic_bw_rx=None)
 
     # -- identity --------------------------------------------------------
 
@@ -387,14 +567,26 @@ class Topology:
                 h.update(repr((f.intra_topology, f.b_intra,
                                f.m_gpus)).encode())
             h.update(self.nic_bw.tobytes())
+            if self.nic_bw_rx is not None:
+                h.update(b"rx")
+                h.update(self.nic_bw_rx.tobytes())
             h.update(repr((self.alpha, self.oversubscription)).encode())
             fp = h.hexdigest()
             object.__setattr__(self, "_fingerprint", fp)
         return fp
 
     def __eq__(self, other) -> bool:
+        # Nominal (recovery) rates are deliberately excluded: fabrics with
+        # identical live rates schedule identically, and normalization in
+        # __post_init__ guarantees a fully-recovered topology compares
+        # equal to the pristine original.
         if not isinstance(other, Topology):
             return NotImplemented
+        if (self.nic_bw_rx is None) != (other.nic_bw_rx is None):
+            return False
+        if self.nic_bw_rx is not None and not np.array_equal(
+                self.nic_bw_rx, other.nic_bw_rx):
+            return False
         return (self.fabrics == other.fabrics
                 and self.nic_bw.shape == other.nic_bw.shape
                 and np.array_equal(self.nic_bw, other.nic_bw)
@@ -407,20 +599,35 @@ class Topology:
     # -- serialization ---------------------------------------------------
 
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "fabrics": [f.to_dict() for f in self.fabrics],
             "nic_bw": self.nic_bw.tolist(),
             "alpha": float(self.alpha),
             "oversubscription": float(self.oversubscription),
         }
+        # Optional planes serialize only when present, so symmetric /
+        # pristine fabrics keep the pre-existing JSON shape.
+        for key in ("nic_bw_rx", "nominal_nic_bw", "nominal_nic_rx"):
+            arr = getattr(self, key)
+            if arr is not None:
+                d[key] = arr.tolist()
+        return d
 
     @classmethod
     def from_dict(cls, d: Optional[Dict[str, Any]]) -> Optional["Topology"]:
         if d is None:
             return None
+
+        def opt(key):
+            arr = d.get(key)
+            return None if arr is None else np.asarray(arr, dtype=np.float64)
+
         return cls(
             fabrics=tuple(ServerFabric(**f) for f in d["fabrics"]),
             nic_bw=np.asarray(d["nic_bw"], dtype=np.float64),
             alpha=float(d["alpha"]),
             oversubscription=float(d.get("oversubscription", 1.0)),
+            nic_bw_rx=opt("nic_bw_rx"),
+            nominal_nic_bw=opt("nominal_nic_bw"),
+            nominal_nic_rx=opt("nominal_nic_rx"),
         )

@@ -4,8 +4,12 @@ This package turns the one-shot scheduler pipeline (Scheduler -> Plan ->
 compiled executor) into a long-running daemon that many MoE jobs share:
 
   * ``server``    -- ``PlanServer``: the daemon (fast path, worker pool,
-                     background upgrades, prewarming).
-  * ``client``    -- ``PlanClient``: a job's handle; inline fallback.
+                     background upgrades, prewarming, fabric-event
+                     re-repair, worker respawn).
+  * ``client``    -- ``PlanClient``: a job's handle; retry with backoff,
+                     deadline, inline fallback.
+  * ``events``    -- ``FabricEvent``/``FabricMonitor``: topology change
+                     as a versioned event stream.
   * ``queue``     -- priority tiers, admission control, staleness shedding.
   * ``policy``    -- TTL eviction and the drift predictor.
   * ``telemetry`` -- counters, latency percentiles, synthesis histograms.
@@ -15,6 +19,7 @@ See DESIGN.md section 2 ("The serving layer") for the architecture and
 """
 
 from .client import PlanClient
+from .events import FabricEvent, FabricMonitor
 from .policy import DriftPredictor, TTLPolicy
 from .queue import (
     AdmissionError,
@@ -39,6 +44,8 @@ __all__ = [
     "AdmissionError",
     "ServerClosed",
     "DEFAULT_STALE_AFTER",
+    "FabricEvent",
+    "FabricMonitor",
     "TTLPolicy",
     "DriftPredictor",
     "Telemetry",

@@ -111,8 +111,9 @@ class DriftPredictor:
             raise ValueError("max_families must be >= 1")
         self.max_families = max_families
         self._lock = threading.Lock()
-        # family key -> (workload template, [prev_matrix, last_matrix])
-        self._families: "OrderedDict[str, Tuple[Workload, List[np.ndarray]]]"
+        # family key -> (workload template, [prev_matrix, last_matrix],
+        #                algorithm)
+        self._families: "OrderedDict[str, Tuple[Workload, List[np.ndarray], str]]"  # noqa: E501
         self._families = OrderedDict()
 
     def observe(self, w: Workload, algorithm: str) -> None:
@@ -120,13 +121,13 @@ class DriftPredictor:
         with self._lock:
             entry = self._families.get(family)
             if entry is None:
-                self._families[family] = (w, [w.matrix])
+                self._families[family] = (w, [w.matrix], algorithm)
             else:
                 history = entry[1]
                 if not np.array_equal(history[-1], w.matrix):
                     history.append(w.matrix)
                     del history[:-2]  # keep (prev, last)
-                self._families[family] = (w, history)
+                self._families[family] = (w, history, algorithm)
             self._families.move_to_end(family)
             while len(self._families) > self.max_families:
                 self._families.popitem(last=False)
@@ -143,7 +144,7 @@ class DriftPredictor:
             entry = self._families.get(family)
             if entry is None or len(entry[1]) < 2:
                 return []
-            template, (prev, last) = entry
+            template, (prev, last), _ = entry
         nxt = np.maximum(2.0 * last - prev, 0.0)
         np.fill_diagonal(nxt, 0.0)
         if np.array_equal(nxt, last):
@@ -153,3 +154,40 @@ class DriftPredictor:
     def families(self) -> int:
         with self._lock:
             return len(self._families)
+
+    def snapshot(self) -> List[Tuple[str, Workload, str]]:
+        """Every tracked family's latest traffic, MRU last: ``(family
+        key, workload carrying the last observed matrix, algorithm)``.
+
+        The fabric-event re-repair walk consumes this -- the predictor is
+        the one component that already knows, per family, *what traffic
+        to re-plan for* on the new topology."""
+        with self._lock:
+            return [(family, Workload(w.cluster, history[-1], w.topology),
+                     algo)
+                    for family, (w, history, algo)
+                    in self._families.items()]
+
+    def rehome(self, old_fingerprint: str, topology) -> int:
+        """Migrate families observed on a pre-event fabric to the new one.
+
+        Keeps each family's drift history (prev/last matrices) across a
+        fabric event, so prewarming keeps predicting through the event
+        window instead of restarting cold under the new family keys.
+        Returns the number of families migrated."""
+        with self._lock:
+            moved = 0
+            for family in list(self._families.keys()):
+                w, history, algo = self._families[family]
+                t = w.topo
+                if t.fingerprint() != old_fingerprint:
+                    continue
+                if (t.n_servers, t.m_gpus) != (topology.n_servers,
+                                               topology.m_gpus):
+                    continue
+                new_w = Workload(w.cluster, w.matrix, topology)
+                new_family = cluster_family_key(new_w, algo)
+                self._families.pop(family)
+                self._families[new_family] = (new_w, history, algo)
+                moved += 1
+            return moved

@@ -84,20 +84,35 @@ class PlanTicket:
     ``result`` blocks until a worker (or the fast path) resolves the
     ticket; failures -- shed, rejected, server stopped, synthesis error --
     re-raise in the waiting thread.
+
+    Resolution is first-write-wins: ``resolve``/``fail`` return whether
+    this call settled the ticket, and later calls are no-ops.  The worker
+    respawn path relies on this -- a dying worker's cleanup can blindly
+    fail its last request without clobbering an answer that already
+    reached the client (and without double-counting in telemetry).
     """
 
     def __init__(self):
         self._event = threading.Event()
+        self._lock = threading.Lock()
         self._answer = None
         self._exc: Optional[BaseException] = None
 
-    def resolve(self, answer) -> None:
-        self._answer = answer
-        self._event.set()
+    def resolve(self, answer) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._answer = answer
+            self._event.set()
+            return True
 
-    def fail(self, exc: BaseException) -> None:
-        self._exc = exc
-        self._event.set()
+    def fail(self, exc: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._exc = exc
+            self._event.set()
+            return True
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -117,8 +132,9 @@ class PlanRequest:
     ``kind`` distinguishes client-facing plan requests from the daemon's
     own background jobs: ``"plan"`` (a client waits on ``ticket``),
     ``"upgrade"`` (replace a warm-repaired cache entry with the exact
-    plan) and ``"prewarm"`` (synthesize a predicted fingerprint ahead of
-    demand).  Background kinds carry no ticket.
+    plan), ``"prewarm"`` (synthesize a predicted fingerprint ahead of
+    demand) and ``"rerepair"`` (re-repair a plan family across a fabric
+    event; see serving/events.py).  Background kinds carry no ticket.
     """
 
     workload: Workload
@@ -134,9 +150,13 @@ class PlanRequest:
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_req_ids))
 
-    def fail(self, exc: BaseException) -> None:
+    def fail(self, exc: BaseException) -> bool:
+        """Fail the waiter, if any; True when this call settled the
+        ticket (first write), False for ticketless/already-settled
+        requests."""
         if self.ticket is not None:
-            self.ticket.fail(exc)
+            return self.ticket.fail(exc)
+        return False
 
 
 def _normalize_stale(stale_after) -> Optional[Dict[Tier, float]]:

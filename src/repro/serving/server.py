@@ -27,6 +27,18 @@ The request path is split so the common case never waits on a queue:
     traffic trajectory one step ahead; predicted fingerprints are
     synthesized at BACKGROUND priority before any client requests them.
 
+**Fabric events** (serving/events.py) make topology change a first-class
+scenario instead of an implicit cache wipe: ``apply_fabric_event`` swaps
+the server's active ``Topology``, walks the cache's family index and
+re-repairs every affected plan family against the new pair capacities at
+BACKGROUND priority (``"rerepair"`` jobs), and keeps serving throughout
+-- requests carrying a pre-event fabric are re-homed onto the live one
+(``stale_topology`` counter), and a post-event miss warm-repairs from
+the old fabric's family head (``try_repair_plan(topology_change=True)``)
+rather than synthesizing cold.  Workers that die on an unexpected
+exception fail their in-flight ticket, clean up, and respawn in place
+(``worker_deaths`` counter), so a crash never leaves a queue slot dead.
+
 Lifecycle: ``start()``/``stop()`` or use as a context manager;
 ``drain()`` waits for the queue and background work to settle (tests and
 benchmarks use it to observe the post-upgrade steady state);
@@ -48,7 +60,9 @@ from ..core.plan import (
     traffic_fingerprint,
 )
 from ..core.schedulers import RepairConfig, Scheduler, get_scheduler
+from ..core.topology import Topology
 from ..core.traffic import Workload
+from .events import FabricEvent, FabricMonitor
 from .policy import DriftPredictor, TTLPolicy
 from .queue import (
     AdmissionError,
@@ -106,6 +120,11 @@ class PlanServer:
         the incremental/one-shot engine switch.  None uses the
         scheduler's defaults.  Every repair attempt's residual fraction
         lands in the telemetry ``repair`` histogram.
+      topology: the fabric this server believes is live.  Optional -- a
+        server that never sees a fabric event does not need one.  Set it
+        (or call ``attach_monitor``) to enable re-homing of requests that
+        still carry a pre-event ``Topology`` and the event-driven
+        re-repair walk in ``apply_fabric_event``.
     """
 
     def __init__(self, cache: Optional[PlanCache] = None, *,
@@ -116,7 +135,8 @@ class PlanServer:
                  synth_budget_seconds: Optional[float] = None,
                  telemetry: Optional[Telemetry] = None,
                  predictor: Optional[DriftPredictor] = None,
-                 repair_config: Optional[RepairConfig] = None):
+                 repair_config: Optional[RepairConfig] = None,
+                 topology: Optional[Topology] = None):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.cache = cache if cache is not None else PlanCache(
@@ -142,6 +162,15 @@ class PlanServer:
         self._busy = 0  # requests popped from the queue, not yet finished
         self._running = False
         self._closed = False
+        self._active_topo = topology
+        self._fabric_version = 0
+        # new-fabric family key -> old-fabric family key: lets a
+        # post-event miss warm-repair from the pre-event family head
+        # before any rerepair job has landed.  Insertion-ordered, bounded.
+        self._family_alias: Dict[str, str] = {}
+        # thread ident -> the request that thread is serving; consulted by
+        # _worker_main when the worker dies so the ticket can be failed.
+        self._dying: Dict[int, PlanRequest] = {}
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -153,7 +182,7 @@ class PlanServer:
                 raise ServerClosed("server was stopped; build a new one")
             self._running = True
         for i in range(self._n_workers):
-            t = threading.Thread(target=self._worker_loop,
+            t = threading.Thread(target=self._worker_main,
                                  name=f"plan-server-{i}", daemon=True)
             t.start()
             self._threads.append(t)
@@ -203,6 +232,7 @@ class PlanServer:
                 " or call start())")
         t_start = time.perf_counter()
         self.telemetry.count("requests")
+        w = self._rehome(w)
         self.predictor.observe(w, algorithm)
         key = traffic_fingerprint(w, algorithm)
         ticket = PlanTicket()
@@ -233,7 +263,117 @@ class PlanServer:
             snap["repair"]["config"] = dataclasses.asdict(cfg)
         with self._lock:
             snap["pending_upgrades"] = len(self._inexact)
+            if self._active_topo is not None:
+                snap["fabric"]["topology"] = self._active_topo.fingerprint()
         return snap
+
+    # -- fabric events -----------------------------------------------------
+
+    def attach_monitor(self, monitor: FabricMonitor) -> "PlanServer":
+        """Adopt ``monitor``'s fabric as active and subscribe to its
+        events; every later ``inject`` flows into ``apply_fabric_event``
+        (strictly version-ordered -- the monitor notifies under its
+        lock)."""
+        with self._lock:
+            self._active_topo = monitor.current()
+            self._fabric_version = monitor.version
+        monitor.subscribe(self.apply_fabric_event)
+        return self
+
+    def apply_fabric_event(self, event: FabricEvent,
+                           topology: Optional[Topology] = None) -> int:
+        """Swap the active fabric and re-repair every affected family.
+
+        The serving answer to a NIC degrading or dying is *bounded
+        slowdown*, not a stall: the cache is never wiped.  Each family
+        the DriftPredictor tracks on the outgoing fabric gets (a) a
+        BACKGROUND ``"rerepair"`` job that warm-repairs its head plan
+        against the new pair capacities, and (b) a family alias so a
+        client miss that arrives before the job lands still repairs from
+        the old head synchronously instead of synthesizing cold.
+
+        ``topology`` overrides the post-event fabric (used when the
+        caller already constructed it); otherwise ``event.apply`` derives
+        it from the current one.  Events at or below the last applied
+        version are ignored (a late-delivered duplicate must not re-swap
+        a fabric that has since moved on).  Returns the number of
+        families scheduled for re-repair.
+        """
+        with self._lock:
+            if event.version and event.version <= self._fabric_version:
+                stale = True
+                old = new = None
+            else:
+                stale = False
+                old = self._active_topo
+                new = topology
+                if new is None:
+                    if old is None:
+                        raise ValueError(
+                            "no active topology: construct with"
+                            " PlanServer(topology=...), call"
+                            " attach_monitor(), or pass topology=")
+                    new = event.apply(old)
+                self._active_topo = new
+                self._fabric_version = (event.version
+                                        or self._fabric_version + 1)
+            version = self._fabric_version
+        if stale:
+            self.telemetry.count("fabric_events_stale")
+            return 0
+        self.telemetry.count("fabric_events")
+        self.telemetry.observe_fabric_event(version, event.describe())
+        return self._rerepair_families(old, new)
+
+    def _rehome(self, w: Workload) -> Workload:
+        """Move a request riding a stale fabric onto the active one.
+
+        Clients built before a fabric event keep submitting workloads
+        whose ``Topology`` predates it; planning against that fabric
+        would produce schedules the real network can no longer honor.
+        Only same-shape fabrics are re-homed -- a genuinely different
+        cluster is the client's business, not staleness."""
+        active = self._active_topo
+        if active is None:
+            return w
+        topo = w.topo
+        if topo is active or topo.fingerprint() == active.fingerprint():
+            return w
+        if (topo.n_servers, topo.m_gpus) != (active.n_servers,
+                                             active.m_gpus):
+            return w
+        self.telemetry.count("stale_topology")
+        return Workload(w.cluster, w.matrix, active)
+
+    def _rerepair_families(self, old: Optional[Topology],
+                           new: Topology) -> int:
+        """Schedule one BACKGROUND rerepair per family planned on ``old``.
+
+        The PlanCache family index knows the *plans* (``family_heads``);
+        the DriftPredictor knows the *traffic* each family last saw.
+        Joining them gives the work list: re-plan the last observed
+        matrix of every family whose head rode the outgoing fabric."""
+        if old is None:
+            return 0
+        old_fp = old.fingerprint()
+        heads = {family: plan for family, plan in self.cache.family_heads()
+                 if plan.topo.fingerprint() == old_fp}
+        scheduled = 0
+        for family, w_last, algo in self.predictor.snapshot():
+            prev = heads.get(family)
+            if prev is None or w_last.topo.fingerprint() != old_fp:
+                continue
+            w_new = Workload(w_last.cluster, w_last.matrix, new)
+            with self._lock:
+                self._family_alias[cluster_family_key(w_new, algo)] = family
+                while len(self._family_alias) > 256:
+                    self._family_alias.pop(next(iter(self._family_alias)))
+            self._schedule_background(
+                "rerepair", w_new, algo,
+                traffic_fingerprint(w_new, algo), stale_plan=prev)
+            scheduled += 1
+        self.predictor.rehome(old_fp, new)
+        return scheduled
 
     # -- fast-path helpers -------------------------------------------------
 
@@ -273,7 +413,49 @@ class PlanServer:
 
     # -- worker side -------------------------------------------------------
 
+    def _worker_main(self) -> None:
+        """Thread target: run ``_worker_loop`` and survive its death.
+
+        The loop's inner ``except Exception`` backstop already keeps
+        ordinary synthesis failures from killing a worker, but anything
+        that escapes it (a raising telemetry hook, ``KeyboardInterrupt``,
+        a bug in the loop itself) used to take the thread down and leave
+        its queue slot dead forever.  Now the dying worker fails the
+        ticket it was holding (first-write-wins on ``PlanTicket`` makes
+        the blind ``fail`` safe), releases its in-flight registration so
+        coalesced waiters are not stranded, counts ``worker_deaths``, and
+        respawns in place -- same thread, fresh loop."""
+        ident = threading.get_ident()
+        while True:
+            try:
+                self._worker_loop()
+                return  # clean shutdown
+            except BaseException as exc:
+                req = self._dying.pop(ident, None)
+                if req is not None:
+                    if req.fail(exc):
+                        self.telemetry.count("errors")
+                    with self._lock:
+                        waiters = self._inflight.get(req.key)
+                        # Only yank the registration this request owns; a
+                        # coalesced waiter's list belongs to another
+                        # (live) worker.
+                        if waiters and waiters[0] is req:
+                            del self._inflight[req.key]
+                        else:
+                            waiters = None
+                        if req.kind != "plan":
+                            self._background_keys.discard(req.key)
+                    for r in waiters or ():
+                        if r is not req and r.fail(exc):
+                            self.telemetry.count("errors")
+                self.telemetry.count("worker_deaths")
+                with self._lock:
+                    if self._closed:
+                        return
+
     def _worker_loop(self) -> None:
+        ident = threading.get_ident()
         while True:
             req = self.queue.get(timeout=0.1)
             if req is None:
@@ -286,6 +468,7 @@ class PlanServer:
                         self._inexact.discard(key)
                     self.telemetry.count("expired")
                 continue
+            self._dying[ident] = req
             with self._lock:
                 self._busy += 1
             try:
@@ -293,16 +476,24 @@ class PlanServer:
                     self._serve(req)
                 elif req.kind == "upgrade":
                     self._upgrade(req)
+                elif req.kind == "rerepair":
+                    self._rerepair_job(req)
                 else:
                     self._prewarm_job(req)
             except Exception as exc:  # backstop: never kill a worker
-                req.fail(exc)
-                self.telemetry.count("errors")
+                # "errors" only when a client ticket actually failed --
+                # counting ticketless background failures there would
+                # break the requests == sum(outcomes) conservation law.
+                if req.fail(exc):
+                    self.telemetry.count("errors")
+                else:
+                    self.telemetry.count("background_errors")
             finally:
                 with self._lock:
                     self._busy -= 1
                     if req.kind != "plan":
                         self._background_keys.discard(req.key)
+            self._dying.pop(ident, None)  # settled without dying
 
     def _scheduler(self, algorithm: str) -> Scheduler:
         # get_scheduler builds a fresh stateless instance; cheap enough
@@ -326,7 +517,7 @@ class PlanServer:
             plan = self._lookup_live(key, counted=False)
             if plan is None:
                 plan, source, exact = self._synthesize_best(req)
-        except Exception as e:
+        except BaseException as e:
             err = e
         finally:
             with self._lock:
@@ -334,9 +525,13 @@ class PlanServer:
         if err is not None or plan is None:
             err = err if err is not None else RuntimeError(
                 "plan synthesis produced no plan")
-            self.telemetry.count("errors", len(waiters))
             for r in waiters:
-                r.fail(err)
+                if r.fail(err):
+                    self.telemetry.count("errors")
+            if not isinstance(err, Exception):
+                # Genuinely fatal (KeyboardInterrupt & co): the waiters
+                # are settled, now let the worker die -- and respawn.
+                raise err
             return
         for i, r in enumerate(waiters):
             self._answer(r, plan, source if i == 0 else "hit",
@@ -347,20 +542,28 @@ class PlanServer:
         scheduler = self._scheduler(req.algorithm)
         w, key = req.workload, req.key
         plan, source, exact = None, "cold", True
-        prev = self.cache.peek_family(
-            cluster_family_key(w, req.algorithm))
+        family = cluster_family_key(w, req.algorithm)
+        prev = self.cache.peek_family(family)
+        topology_change = False
+        if prev is not None and \
+                prev.topo.fingerprint() != w.topo.fingerprint():
+            prev = None  # same family key, different fabric: unusable
+        if prev is None:
+            prev = self._alias_head(family, w)
+            topology_change = prev is not None
         if prev is not None and hasattr(scheduler, "try_repair_plan") and \
-                prev.cluster == w.cluster and \
-                prev.topo.fingerprint() == w.topo.fingerprint():
+                prev.cluster == w.cluster:
             repair_stats: Dict = {}
             plan = scheduler.try_repair_plan(
                 prev, w, fingerprint=key, config=self.repair_config,
-                stats=repair_stats)
+                stats=repair_stats, topology_change=topology_change)
             if "residual_fraction" in repair_stats:
                 self.telemetry.observe_repair_residual(
                     repair_stats["residual_fraction"])
             if plan is not None:
                 source, exact = "warm", False
+                if topology_change:
+                    self.telemetry.count("rerepaired")
             else:
                 self.telemetry.count("repair_tripped")
         if plan is None:
@@ -419,6 +622,67 @@ class PlanServer:
         except (AdmissionError, ServerClosed):
             with self._lock:
                 self._background_keys.discard(key)
+
+    def _alias_head(self, family: str, w: Workload) -> Optional[Plan]:
+        """Cross-fabric warm seed for a post-event miss.
+
+        Right after a fabric event the new-fabric family has no members
+        yet; the alias recorded by ``_rerepair_families`` points back at
+        the pre-event family whose head is still a better starting point
+        than cold synthesis."""
+        with self._lock:
+            old_family = self._family_alias.get(family)
+        if old_family is None:
+            return None
+        prev = self.cache.peek_family(old_family)
+        if prev is None or prev.cluster != w.cluster or \
+                (prev.topo.n_servers, prev.topo.m_gpus) != (
+                    w.topo.n_servers, w.topo.m_gpus):
+            return None
+        return prev
+
+    def _rerepair_job(self, req: PlanRequest) -> None:
+        """Re-plan one family's last traffic on the post-event fabric.
+
+        Warm path: ``try_repair_plan(topology_change=True)`` keeps the
+        old head's permutation structure and re-water-fills it against
+        the new pair capacities (the quality ratchet is relaxed to
+        ``TOPOLOGY_CHANGE_QUALITY_RATCHET`` -- the old structure is
+        necessarily a bit off the new fabric's optimum).  Cold fallback
+        only if repair trips.  The result is inserted inexact so the
+        normal upgrade machinery converges it to the exact plan."""
+        if self._lookup_live(req.key, counted=False) is not None:
+            return  # a client miss already re-planned this family
+        scheduler = self._scheduler(req.algorithm)
+        prev, w = req.stale_plan, req.workload
+        plan: Optional[Plan] = None
+        if prev is not None and hasattr(scheduler, "try_repair_plan") and \
+                prev.cluster == w.cluster:
+            repair_stats: Dict = {}
+            plan = scheduler.try_repair_plan(
+                prev, w, fingerprint=req.key, config=self.repair_config,
+                stats=repair_stats, topology_change=True)
+            if "residual_fraction" in repair_stats:
+                self.telemetry.observe_repair_residual(
+                    repair_stats["residual_fraction"])
+        exact = False
+        if plan is not None:
+            self.telemetry.count("rerepaired")
+        else:
+            plan, exact = scheduler.synthesize_bounded(
+                w, self.synth_budget_seconds, fingerprint=req.key)
+            self.telemetry.count("rerepair_cold")
+        self.telemetry.observe_synthesis(plan.synth_seconds)
+        plan.compile()
+        self._insert(req.key, plan, exact=exact)
+        if not exact:
+            # This key is still registered in _background_keys (released
+            # only after the dispatch returns); drop it first or the
+            # chained upgrade would be deduplicated away.
+            with self._lock:
+                self._background_keys.discard(req.key)
+            self._schedule_background("upgrade", w, req.algorithm,
+                                      req.key, stale_plan=plan)
 
     def _upgrade(self, req: PlanRequest) -> None:
         """Replace a degraded cache entry with the exact plan."""

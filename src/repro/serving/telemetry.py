@@ -19,6 +19,8 @@ section 2):
       "repair":    {"count": int, "residual_sum": float,
                     "hist": {"<=0.01": int, ..., ">1": int}},
       "queue":     {"depth": int, "peak_depth": int},
+      "fabric":    {"version": int, "events": int,
+                    "last_event": str | None},
     }
 """
 
@@ -106,6 +108,9 @@ class Telemetry:
         self._repair_sum = 0.0
         self._queue_depth = 0
         self._queue_peak = 0
+        self._fabric_version = 0
+        self._fabric_events = 0
+        self._fabric_last: str = ""
 
     def count(self, name: str, n: int = 1) -> None:
         with self._lock:
@@ -138,6 +143,14 @@ class Telemetry:
             self._repair_hist[i] += 1
             self._repair_count += 1
             self._repair_sum += float(fraction)
+
+    def observe_fabric_event(self, version: int, description: str) -> None:
+        """Record one applied fabric event (serving/events.py): the
+        daemon's current fabric version plus a human-readable tail."""
+        with self._lock:
+            self._fabric_version = int(version)
+            self._fabric_events += 1
+            self._fabric_last = description
 
     def observe_queue_depth(self, depth: int) -> None:
         with self._lock:
@@ -177,6 +190,9 @@ class Telemetry:
                            "hist": repair_hist},
                 "queue": {"depth": self._queue_depth,
                           "peak_depth": self._queue_peak},
+                "fabric": {"version": self._fabric_version,
+                           "events": self._fabric_events,
+                           "last_event": self._fabric_last or None},
             }
 
     def to_json(self, indent: int = 2) -> str:

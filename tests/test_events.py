@@ -1,0 +1,363 @@
+"""Fault-tolerant elasticity tests (issue 8): fabric events as a
+versioned stream, PlanServer topology swap + family re-repair, request
+re-homing, worker death/respawn with conserved accounting, and the
+client's retry/backoff/deadline ladder with inline fallback.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterSpec,
+    Topology,
+    execute_plan,
+    get_scheduler,
+    moe_workload,
+)
+from repro.core.traffic import Workload
+from repro.serving import (
+    AdmissionError,
+    FabricEvent,
+    FabricMonitor,
+    PlanClient,
+    PlanServer,
+    ServerClosed,
+    Tier,
+)
+
+C = ClusterSpec(n_servers=4, m_gpus=2)
+T = Topology.homogeneous(4, 2)
+
+
+def _w(topo, scale=1.0, seed=0):
+    base = moe_workload(C, 512, 64, top_k=2, seed=seed)
+    return Workload(C, base.matrix * scale, topo)
+
+
+# -- FabricEvent -----------------------------------------------------------
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FabricEvent(kind="explode", server=0)
+    with pytest.raises(ValueError, match="direction"):
+        FabricEvent(kind="fail", server=0, direction="sideways")
+    with pytest.raises(ValueError, match="factor"):
+        FabricEvent(kind="degrade", server=0, factor=1.5)
+
+
+def test_event_apply_matches_scenario_constructors():
+    assert FabricEvent(kind="fail", server=0, nic=1).apply(T) \
+        == T.fail_nic(0, 1)
+    assert FabricEvent(kind="degrade", server=2, nic=0, factor=0.5,
+                       direction="down").apply(T) \
+        == T.degrade_nic(2, 0, 0.5, direction="down")
+    assert FabricEvent(kind="degrade", server=1, factor=0.25).apply(T) \
+        == T.degrade_server(1, 0.25)
+    assert FabricEvent(kind="fail", server=3).apply(T) == T.fail_server(3)
+    hurt = T.fail_nic(0, 1)
+    assert FabricEvent(kind="recover", server=0, nic=1).apply(hurt) == T
+    assert FabricEvent(kind="recover", server=0).apply(hurt) == T
+
+
+def test_event_describe_and_dict():
+    ev = FabricEvent(kind="degrade", server=1, nic=0, factor=0.5,
+                     direction="up", version=3)
+    s = ev.describe()
+    assert "v3" in s and "degrade" in s and "1.0" in s and "up" in s
+    d = ev.to_dict()
+    assert d["kind"] == "degrade" and d["version"] == 3
+
+
+# -- FabricMonitor ---------------------------------------------------------
+
+def test_monitor_versions_and_history():
+    mon = FabricMonitor(T)
+    assert mon.version == 0 and mon.current() is T
+    e1 = mon.inject("fail", server=0, nic=0)
+    e2 = mon.inject("degrade", server=1, nic=1, factor=0.5)
+    assert (e1.version, e2.version) == (1, 2)
+    assert mon.version == 2
+    assert mon.current() == T.fail_nic(0, 0).degrade_nic(1, 1, 0.5)
+    assert [e.version for e in mon.history()] == [1, 2]
+
+
+def test_monitor_notifies_in_version_order():
+    mon = FabricMonitor(T)
+    seen = []
+    mon.subscribe(lambda ev, topo: seen.append((ev.version,
+                                                topo.fingerprint())))
+    mon.inject("fail", server=0, nic=0)
+    mon.inject("recover", server=0, nic=0)
+    assert [v for v, _ in seen] == [1, 2]
+    assert seen[1][1] == T.fingerprint()
+
+
+# -- PlanServer: event handling -------------------------------------------
+
+def test_apply_event_requires_topology():
+    srv = PlanServer()
+    with pytest.raises(ValueError, match="active topology"):
+        srv.apply_fabric_event(FabricEvent(kind="fail", server=0, nic=0,
+                                           version=1))
+
+
+def test_apply_event_drops_stale_versions():
+    with PlanServer(topology=T) as srv:
+        ev = FabricEvent(kind="fail", server=0, nic=0, version=1)
+        srv.apply_fabric_event(ev)
+        snap = srv.telemetry_snapshot()
+        assert snap["counters"]["fabric_events"] == 1
+        assert snap["fabric"]["version"] == 1
+        # A re-delivered (or reordered) duplicate must not re-fail a NIC
+        # that later events may have recovered.
+        srv.apply_fabric_event(ev)
+        snap = srv.telemetry_snapshot()
+        assert snap["counters"]["fabric_events"] == 1
+        assert snap["counters"]["fabric_events_stale"] == 1
+
+
+def test_server_survives_nic_failure_with_rerepair_and_rehoming():
+    """The tentpole scenario: a NIC dies mid-stream; the server swaps
+    fabrics, re-repairs the warm family in the background, re-homes
+    stale-topology requests, and never stalls or rejects."""
+    mon = FabricMonitor(T)
+    with PlanServer(workers=2) as srv:
+        srv.attach_monitor(mon)
+        cli = PlanClient(srv, algorithm="flash", timeout=30.0)
+        for i in range(3):
+            cli.get_plan(_w(T, 1.0 + 0.01 * i))
+        assert srv.drain()
+
+        mon.inject("fail", server=0, nic=0)
+        degraded = mon.current()
+        assert degraded == T.fail_nic(0, 0)
+
+        # Clients still hold the pre-event Topology: re-homed, answered.
+        for i in range(3):
+            a = cli.get_plan(_w(T, 1.0 + 0.01 * i))
+            assert a.plan.topo.fingerprint() == degraded.fingerprint()
+            a.plan.validate(_w(degraded, 1.0 + 0.01 * i))
+        assert srv.drain()
+
+        mon.inject("recover", server=0, nic=0)
+        assert mon.current() == T
+        assert srv.drain()
+        a = cli.get_plan(_w(T, 1.04))
+        assert a.plan.topo.fingerprint() == T.fingerprint()
+
+        c = srv.telemetry_snapshot()["counters"]
+        assert c["fabric_events"] == 2
+        assert c.get("stale_topology", 0) >= 3
+        assert c.get("rerepaired", 0) + c.get("rerepair_cold", 0) >= 1
+        assert c.get("errors", 0) == 0
+        assert c.get("rejected", 0) == 0 and c.get("shed", 0) == 0
+        assert cli.counters["inline"] == 0  # daemon answered everything
+
+
+def test_rerepaired_plan_quality_is_bounded():
+    """A re-repaired plan on the degraded fabric stays within a small
+    factor of cold synthesis on that fabric (degraded, not broken)."""
+    mon = FabricMonitor(T)
+    with PlanServer(workers=1) as srv:
+        srv.attach_monitor(mon)
+        cli = PlanClient(srv, algorithm="flash", timeout=30.0)
+        cli.get_plan(_w(T, 1.0))
+        assert srv.drain()
+        mon.inject("degrade", server=0, nic=0, factor=0.25)
+        degraded = mon.current()
+        assert srv.drain()
+        w = _w(degraded, 1.0)
+        served = cli.get_plan(w).plan
+        cold = get_scheduler("flash").synthesize(w)
+        t_served = execute_plan(served, w).completion_time
+        t_cold = execute_plan(cold, w).completion_time
+        assert t_served <= 2.0 * t_cold
+
+
+# -- worker death and respawn ---------------------------------------------
+
+def test_worker_death_fails_ticket_and_respawns():
+    """Satellite 1: a worker killed by a BaseException mid-request fails
+    the ticket (client unblocks), counts the death, respawns in place,
+    and accounting stays conserved.  workers=1 makes the respawned slot
+    the only one able to serve the follow-up request."""
+    with PlanServer(workers=1) as srv:
+        orig = srv._synthesize_best
+        mark = {"armed": True}
+
+        def boom(req):
+            if mark["armed"]:
+                mark["armed"] = False
+                raise SystemExit("injected worker crash")
+            return orig(req)
+
+        srv._synthesize_best = boom
+        with pytest.raises(SystemExit):
+            srv.request(_w(T), timeout=10.0)
+        # The same (respawned) worker slot must serve this one.
+        a = srv.request(_w(T, 1.01), timeout=10.0)
+        assert a.source == "cold"
+        c = srv.telemetry_snapshot()["counters"]
+        assert c["worker_deaths"] == 1
+        assert c["errors"] == 1
+        # Conservation: every request has exactly one outcome.
+        outcomes = sum(c.get(k, 0) for k in
+                       ("hits", "warm", "cold", "rejected", "shed",
+                        "errors"))
+        assert c["requests"] == outcomes == 2
+
+
+def test_worker_death_between_requests_respawns_silently():
+    """A BaseException outside any request (queue.get, housekeeping)
+    respawns the worker without failing anything."""
+    with PlanServer(workers=1) as srv:
+        srv.request(_w(T), timeout=10.0)  # make sure the loop is alive
+        dead_sweep = {"armed": True}
+        orig_sweep = srv.ttl.sweep
+
+        def bad_sweep(cache, limit=None):
+            if dead_sweep["armed"]:
+                dead_sweep["armed"] = False
+                raise SystemExit("injected idle crash")
+            return orig_sweep(cache, limit=limit)
+
+        srv.ttl.sweep = bad_sweep
+        # Wait until the idle housekeeping path trips and the worker
+        # respawns, then prove the slot still serves.
+        deadline = 5.0
+        import time as _time
+        t0 = _time.monotonic()
+        while (srv.telemetry.get("worker_deaths") < 1
+               and _time.monotonic() - t0 < deadline):
+            _time.sleep(0.01)
+        assert srv.telemetry.get("worker_deaths") == 1
+        a = srv.request(_w(T, 1.02), timeout=10.0)
+        assert a.plan is not None
+        assert srv.telemetry.get("errors") == 0
+
+
+# -- client retry / backoff / deadline ------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+        self.sleeps = []
+
+    def __call__(self):
+        return self.t
+
+    def sleep(self, s):
+        self.sleeps.append(s)
+        self.t += s
+
+
+class StubServer:
+    """Minimal PlanServer stand-in: scripted failures, then an answer."""
+
+    def __init__(self, failures=(), answer="answer", clock=None,
+                 advance=0.0):
+        self.failures = list(failures)
+        self.answer = answer
+        self.timeouts = []
+        self.clock = clock
+        self.advance = advance
+
+    def request(self, w, algorithm, tier, timeout=None):
+        self.timeouts.append(timeout)
+        if self.clock is not None:
+            self.clock.t += self.advance  # simulated time spent waiting
+        if self.failures:
+            raise self.failures.pop(0)
+        return self.answer
+
+
+def _stub_answer():
+    import dataclasses as _dc
+
+    @_dc.dataclass
+    class A:
+        source: str = "hit"
+        plan: object = None
+    return A()
+
+
+def test_client_retries_with_exponential_backoff():
+    clk = FakeClock()
+    srv = StubServer(failures=[AdmissionError("full"),
+                               AdmissionError("full")],
+                     answer=_stub_answer())
+    cli = PlanClient(srv, max_retries=3, backoff_base=0.1, backoff_cap=1.0,
+                     clock=clk, sleep=clk.sleep)
+    a = cli.get_plan(_w(T))
+    assert a.source == "hit"
+    assert cli.counters["retries"] == 2
+    assert clk.sleeps == pytest.approx([0.1, 0.2])
+
+
+def test_client_backoff_is_capped():
+    clk = FakeClock()
+    srv = StubServer(failures=[TimeoutError()] * 3, answer=_stub_answer())
+    cli = PlanClient(srv, max_retries=5, backoff_base=1.0, backoff_cap=1.5,
+                     clock=clk, sleep=clk.sleep)
+    cli.get_plan(_w(T))
+    assert clk.sleeps == pytest.approx([1.0, 1.5, 1.5])
+
+
+def test_client_falls_back_inline_after_retries(monkeypatch):
+    clk = FakeClock()
+    srv = StubServer(failures=[AdmissionError("full")] * 10)
+    cli = PlanClient(srv, algorithm="flash", max_retries=1,
+                     backoff_base=0.1, clock=clk, sleep=clk.sleep)
+    a = cli.get_plan(_w(T))
+    assert a.source == "inline"
+    assert cli.counters["inline"] == 1
+    assert cli.counters["retries"] == 1
+    assert len(srv.timeouts) == 2  # initial + one retry
+
+
+def test_client_server_closed_is_terminal():
+    clk = FakeClock()
+    srv = StubServer(failures=[ServerClosed("stopped")] * 2)
+    cli = PlanClient(srv, algorithm="flash", max_retries=5,
+                     clock=clk, sleep=clk.sleep)
+    a = cli.get_plan(_w(T))
+    assert a.source == "inline"
+    assert cli.counters["retries"] == 0
+    assert len(srv.timeouts) == 1  # no retry against a stopped server
+    assert clk.sleeps == []
+
+
+def test_client_deadline_trims_attempts_and_sleeps():
+    clk = FakeClock()
+    srv = StubServer(failures=[TimeoutError()] * 10, clock=clk,
+                     advance=6.0)
+    cli = PlanClient(srv, algorithm="flash", timeout=60.0, max_retries=10,
+                     backoff_base=0.0, deadline=10.0,
+                     clock=clk, sleep=clk.sleep)
+    a = cli.get_plan(_w(T))
+    assert a.source == "inline"
+    # First attempt gets min(timeout, deadline)=10; 6s pass; the second
+    # attempt is trimmed to the remaining 4; then the budget is spent.
+    assert srv.timeouts == pytest.approx([10.0, 4.0])
+
+
+def test_client_without_fallback_raises():
+    clk = FakeClock()
+    srv = StubServer(failures=[AdmissionError("full")] * 3)
+    cli = PlanClient(srv, inline_fallback=False, max_retries=1,
+                     backoff_base=0.0, clock=clk, sleep=clk.sleep)
+    with pytest.raises(AdmissionError):
+        cli.get_plan(_w(T))
+
+
+def test_client_fallback_parity_with_inline_synthesis():
+    """A fallback answer is a real plan: same completion time as calling
+    the scheduler inline."""
+    srv = StubServer(failures=[AdmissionError("full")] * 10)
+    cli = PlanClient(srv, algorithm="flash", max_retries=0)
+    w = _w(T)
+    a = cli.get_plan(w)
+    assert a.source == "inline" and a.exact
+    direct = get_scheduler("flash").synthesize(w)
+    assert execute_plan(a.plan, w).completion_time == pytest.approx(
+        execute_plan(direct, w).completion_time)

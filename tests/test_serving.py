@@ -123,6 +123,53 @@ def test_plan_cache_evict_and_peek():
     assert len(cache) == 0
 
 
+def test_explicit_evict_repoints_family_index():
+    """Regression pin (issue 8, satellite 2): evicting the family's
+    canonical key via ``evict()`` must keep the family index in lockstep
+    exactly like LRU eviction does -- repoint at the MRU survivor, or
+    drop the family with its last member.  A stale family -> evicted-key
+    pointer would silently turn every warm start cold."""
+    from repro.core import cluster_family_key
+
+    cache = PlanCache(capacity=8, warm_start=True)
+    flash = get_scheduler("flash")
+    w1, w2 = _w(seed=1), _near_miss(_w(seed=1), seed=8)
+    p1 = cache.get_or_synthesize(flash, w1)
+    p2 = cache.get_or_synthesize(flash, w2)
+    family = cluster_family_key(w1, "flash")
+    assert cluster_family_key(w2, "flash") == family  # same family
+    assert cache.peek_family(family) is p2  # canonical = latest insert
+
+    # Evict the canonical key: the index must repoint at the survivor.
+    assert cache.evict(traffic_fingerprint(w2, "flash"))
+    assert cache.peek_family(family) is p1
+
+    # A warm-repair attempt from the repointed head still works.
+    w3 = _near_miss(_w(seed=1), seed=9)
+    repaired = flash.try_repair_plan(cache.peek_family(family), w3)
+    assert repaired is not None
+    repaired.validate(w3)
+
+    # Evicting the last member drops the family entirely.
+    assert cache.evict(traffic_fingerprint(w1, "flash"))
+    assert cache.peek_family(family) is None
+    assert cache.family_heads() == []
+
+
+def test_family_heads_lists_one_head_per_family():
+    cache = PlanCache(capacity=8, warm_start=True)
+    flash = get_scheduler("flash")
+    from repro.core import cluster_family_key
+
+    w_a = _w(seed=1)
+    w_b = _w(seed=2, cluster=ClusterSpec(n_servers=2, m_gpus=4))
+    p_a = cache.get_or_synthesize(flash, w_a)
+    p_b = cache.get_or_synthesize(flash, w_b)
+    heads = dict(cache.family_heads())
+    assert heads == {cluster_family_key(w_a, "flash"): p_a,
+                     cluster_family_key(w_b, "flash"): p_b}
+
+
 # -- tiered queue ------------------------------------------------------------
 
 def _req(tier=Tier.INTERACTIVE, kind="plan", key="k"):

@@ -492,3 +492,107 @@ def test_resolve_all_to_all_auto_reads_topology():
         topology = het
 
     assert resolve_all_to_all(_Dist()).func is flash_all_to_all
+
+
+# -- fabric elasticity: degrade / fail / recover ---------------------------
+#
+# PR 8's fabric-event pipeline leans on three topology-model guarantees:
+# every scenario constructor changes the fingerprint (plans keyed on the
+# old fabric can never be served as the new one), recovery is an exact
+# inverse (nominal rates survive any chain of degradations and a JSON
+# round trip), and a fully-dead server degrades the *numbers* (inf
+# completion) but never the *machinery* (plans still validate).
+
+def test_degrade_zero_equals_fail():
+    t = _homo()
+    assert t.degrade_nic(1, 3, 0.0) == t.fail_nic(1, 3)
+    assert (t.degrade_nic(1, 3, 0.0).fingerprint()
+            == t.fail_nic(1, 3).fingerprint())
+    assert t.degrade_server(2, 0.0) == t.fail_server(2)
+
+
+def test_every_scenario_constructor_changes_fingerprint():
+    t = _homo()
+    fp = t.fingerprint()
+    variants = [
+        t.degrade_nic(0, 0, 0.5),
+        t.degrade_nic(0, 0, 0.5, direction="up"),
+        t.degrade_nic(0, 0, 0.5, direction="down"),
+        t.fail_nic(0, 0),
+        t.degrade_server(1, 0.25),
+        t.fail_server(1),
+    ]
+    fps = [v.fingerprint() for v in variants]
+    assert all(f != fp for f in fps)
+    # up-only and down-only degradations hit different planes: distinct.
+    assert len(set(fps)) == len(fps)
+
+
+def test_recover_nic_is_exact_inverse():
+    t = _homo()
+    assert t.fail_nic(0, 0).recover_nic(0, 0) == t
+    assert t.fail_nic(0, 0).recover_nic(0, 0).fingerprint() == t.fingerprint()
+    # Chained damage, server-wide recovery.
+    hurt = t.fail_nic(0, 0).degrade_nic(0, 1, 0.5).degrade_server(
+        0, 0.9, direction="down")
+    assert hurt.recover_server(0) == t
+    # Recovering an undamaged fabric is the identity (no nominal baseline).
+    assert t.recover_nic(2, 1) is t
+
+
+def test_asymmetric_direction_forks_planes():
+    t = _homo()
+    up = t.degrade_nic(2, 0, 0.25, direction="up")
+    # Send plane degraded, receive plane untouched.
+    assert up.nic_tx[2, 0] == pytest.approx(0.25 * t.nic_bw[2, 0])
+    assert up.nic_rx[2, 0] == pytest.approx(t.nic_bw[2, 0])
+    assert not up.is_symmetric
+    down = t.degrade_nic(2, 0, 0.25, direction="down")
+    assert down.nic_tx[2, 0] == pytest.approx(t.nic_bw[2, 0])
+    assert down.nic_rx[2, 0] == pytest.approx(0.25 * t.nic_bw[2, 0])
+    # pair_capacity is limited by min(tx[src], rx[dst]) per rail.
+    assert up.pair_capacity()[2, 0] < t.pair_capacity()[2, 0]
+    assert up.pair_capacity()[0, 2] == pytest.approx(
+        t.pair_capacity()[0, 2])
+    # Symmetric fabrics share the plane array (zero-cost accessors).
+    assert t.nic_tx is t.nic_rx
+    # Recovery collapses the fork back to a symmetric fabric.
+    assert up.recover_nic(2, 0) == t
+    assert up.recover_nic(2, 0).is_symmetric
+
+
+def test_degraded_topology_json_round_trip_preserves_recovery():
+    t = _homo()
+    hurt = t.fail_nic(0, 1).degrade_nic(1, 0, 0.5, direction="down")
+    back = Topology.from_dict(json.loads(json.dumps(hurt.to_dict())))
+    assert back == hurt
+    assert back.fingerprint() == hurt.fingerprint()
+    # The nominal baseline survives serde: recovery still works.
+    assert back.recover_server(0).recover_server(1) == t
+
+
+def test_spine_bandwidth_uses_slower_plane():
+    t = _homo()
+    down = t.degrade_server(0, 0.5, direction="down")
+    assert down.spine_bandwidth == pytest.approx(
+        min(down.nic_tx.sum(), down.nic_rx.sum()) / down.oversubscription)
+    assert down.spine_bandwidth < t.spine_bandwidth
+
+
+def test_dead_server_inf_completion_but_plans_validate():
+    t = _homo(4, 2)
+    dead = t
+    for g in range(t.m_gpus):
+        dead = dead.fail_nic(1, g)
+    assert np.all(dead.nic_bw[1] == 0.0)
+    base = balanced_workload(ClusterSpec(4, 2), 1 << 20)
+    w = Workload(base.cluster, base.matrix, dead)
+    from repro.core import optimal_completion_time
+    assert optimal_completion_time(w) == np.inf
+    for algo in available_schedulers():
+        plan = get_scheduler(algo).synthesize(w)
+        plan.validate(w)  # machinery intact: no exception
+        assert execute_plan(plan, w).completion_time == np.inf, algo
+    # Recovery brings completion back to finite.
+    healed = Workload(w.cluster, w.matrix, dead.recover_server(1))
+    assert np.isfinite(simulate(healed, "flash").completion_time)

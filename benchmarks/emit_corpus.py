@@ -1,0 +1,31 @@
+"""Emit the golden plan corpus the CI analysis gate verifies.
+
+    PYTHONPATH=src python -m benchmarks.emit_corpus [--out plan_corpus]
+
+Synthesizes every registered scheduler against the fixed workload
+battery in ``repro.analysis.corpus`` and writes one JSON file of plans
+per workload.  ``python -m repro.analysis --planlint --corpus <dir>``
+then proves every emitted plan structurally sound (incast-free, slots
+feasible, stage order ascending, fingerprint round-trip stable).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.analysis.corpus import emit_corpus
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="plan_corpus",
+                    help="output directory (default: plan_corpus)")
+    args = ap.parse_args()
+    written = emit_corpus(args.out)
+    for path in written:
+        print(path)
+    print(f"{len(written)} corpus file(s) written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

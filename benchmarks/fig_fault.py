@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import time
 
-from repro.core import ClusterSpec, Topology, execute_plan, get_scheduler
+from repro.core import ClusterSpec, execute_plan, get_scheduler
 from repro.core.traffic import Workload
 from repro.serving import FabricMonitor, PlanClient, PlanServer, TieredQueue
 

@@ -23,7 +23,6 @@ from repro.configs import smoke_config
 from repro.configs.registry import MoESpec
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
-from repro.launch.shardings import batch_shardings
 from repro.launch.train import TrainOptions, make_train_step
 from repro.models import build_model
 from repro.optim import init_opt_state

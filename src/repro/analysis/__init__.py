@@ -1,0 +1,30 @@
+"""Static-analysis and concurrency-contract subsystem.
+
+Four coordinated passes keep the scheduler's structural claims -- and the
+serving daemon's thread-safety invariants -- machine-checked instead of
+re-argued in every review (DESIGN.md, "Static analysis & concurrency
+contracts"):
+
+  * ``analysis.locks``    -- named tracked locks, the process-global
+    lock-order graph (cycle = potential deadlock), and
+    forbidden-while-held contracts (no synthesis under a serving lock).
+  * ``analysis.guards``   -- the guarded-state registry: which shared
+    attributes which lock protects, with a dynamic assert-on-write mode.
+  * ``analysis.astlint``  -- custom AST lint (LCK001 raw locks, LCK002
+    unguarded writes, EXC001 swallowed broad excepts, DET001
+    nondeterminism in core/).
+  * ``analysis.planlint`` -- the workload-independent plan verifier:
+    incast-freedom, self-traffic, slot feasibility, stage ordering and
+    topology consistency on serialized Plan JSON and live cache contents.
+
+Run everything with ``python -m repro.analysis --all`` (CI-gated).
+
+This ``__init__`` deliberately imports only the dependency-free runtime
+modules: ``core``/``serving`` import the lock factories from here, so
+pulling in ``planlint`` (which imports ``core.plan``) at package import
+time would be a cycle.
+"""
+
+from . import guards, locks  # noqa: F401  (re-exported submodules)
+
+__all__ = ["locks", "guards"]

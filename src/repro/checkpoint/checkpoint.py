@@ -44,6 +44,7 @@ def save_checkpoint(root: str, step: int, tree: Any,
     np_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
 
     tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_save_")
+    committed = False
     try:
         manifest = {
             "step": step,
@@ -72,9 +73,14 @@ def save_checkpoint(root: str, step: int, tree: Any,
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
+        committed = True
+    finally:
+        # try/finally instead of a broad `except: cleanup; raise`: the
+        # original exception (KeyboardInterrupt and SystemExit included)
+        # propagates untouched, and the staging dir is removed on every
+        # non-committed exit path.
+        if not committed:
+            shutil.rmtree(tmp, ignore_errors=True)
     if keep_last is not None:
         _gc(root, keep_last)
     return _step_dir(root, step)

@@ -81,11 +81,12 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import threading
 from collections import deque
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from ..analysis.locks import check_forbidden, make_lock
 
 __all__ = [
     "Stage",
@@ -500,6 +501,7 @@ def birkhoff_decompose(
       matches it exactly on the support of T (padding shows up as idle slots,
       perm[i] == -1, never as real traffic).
     """
+    check_forbidden("birkhoff_decompose")
     t = np.asarray(t, dtype=np.float64).copy()
     n = t.shape[0]
     if n == 0:
@@ -969,7 +971,7 @@ class DecompositionState:
                       if self.aware else None)
         self._res_seed: Optional[List[int]] = None
         self._take_buf: Optional[np.ndarray] = None
-        self._lock = threading.Lock()
+        self._lock = make_lock("DecompositionState._lock")
         # Slots with no byte capacity can never carry traffic; drop them at
         # ingest so the flat index stays dense.
         self._perms2d = np.where(sent > 0.0, perms, -1)

@@ -41,12 +41,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import threading
 from collections import OrderedDict
 from typing import Any, ClassVar, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.locks import make_rlock
 from .birkhoff import live_slots, live_slots_batch
 from .topology import Topology, uniform_nic_shares
 from .traffic import ClusterSpec, Workload, server_reduce
@@ -607,6 +607,40 @@ class Plan:
                 "plan was synthesized for a different topology than the "
                 "workload's fabric (stale plan?); re-synthesize or pass an "
                 "explicit execution-topology override to execute_plan")
+        self.validate_structure(rtol)
+
+        t_server, s_intra = server_reduce(w.matrix, self.cluster.m_gpus)
+        inter_expected = float(t_server.sum())
+        intra_expected = float(s_intra.sum())
+        inter_carried = 0.0
+        intra_carried = 0.0
+        for p in self.phases:
+            i, s = p.payload(self.cluster)
+            inter_carried += i
+            intra_carried += s
+
+        scale = max(inter_expected, intra_expected, 1.0)
+        if abs(inter_carried - inter_expected) > rtol * scale:
+            raise PlanValidationError(
+                f"inter-server bytes not conserved: plan carries "
+                f"{inter_carried:.6g}, workload has {inter_expected:.6g}")
+        if self.accounts_intra and \
+                abs(intra_carried - intra_expected) > rtol * scale:
+            raise PlanValidationError(
+                f"intra-server bytes not conserved: plan carries "
+                f"{intra_carried:.6g}, workload has {intra_expected:.6g}")
+
+    def validate_structure(self, rtol: float = 1e-6) -> None:
+        """Workload-independent structural checks.
+
+        Everything ``validate`` can prove without the source traffic
+        matrix: permutation stages are incast- and self-traffic-free,
+        payloads fit their slots, blocks are shape-consistent, and (for
+        capacity-aware plans) every stage is slot-vs-rail feasible on the
+        plan's own fabric.  The static plan verifier (analysis/planlint.py)
+        audits serialized plans and live cache contents through this entry
+        point, where no workload is available.
+        """
         for p in self.phases:
             if isinstance(p, PermutationStage):
                 live = [j for j in p.perm if j >= 0]
@@ -638,27 +672,6 @@ class Plan:
                 self._validate_block(p, rtol)
         if self.capacity_aware:
             self._check_slot_rail_feasibility(rtol)
-
-        t_server, s_intra = server_reduce(w.matrix, self.cluster.m_gpus)
-        inter_expected = float(t_server.sum())
-        intra_expected = float(s_intra.sum())
-        inter_carried = 0.0
-        intra_carried = 0.0
-        for p in self.phases:
-            i, s = p.payload(self.cluster)
-            inter_carried += i
-            intra_carried += s
-
-        scale = max(inter_expected, intra_expected, 1.0)
-        if abs(inter_carried - inter_expected) > rtol * scale:
-            raise PlanValidationError(
-                f"inter-server bytes not conserved: plan carries "
-                f"{inter_carried:.6g}, workload has {inter_expected:.6g}")
-        if self.accounts_intra and \
-                abs(intra_carried - intra_expected) > rtol * scale:
-            raise PlanValidationError(
-                f"intra-server bytes not conserved: plan carries "
-                f"{intra_carried:.6g}, workload has {intra_expected:.6g}")
 
     def _validate_block(self, p: "PermutationBlock", rtol: float) -> None:
         """PermutationStage structural checks, vectorized over a block."""
@@ -900,7 +913,7 @@ class PlanCache:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
         self.warm_start = warm_start
-        self._lock = threading.RLock()
+        self._lock = make_rlock("PlanCache._lock")
         self._store: "OrderedDict[str, Plan]" = OrderedDict()
         self._family: Dict[str, str] = {}  # family key -> latest exact key
         self._key_family: Dict[str, str] = {}  # exact key -> its family
@@ -996,7 +1009,7 @@ class PlanCache:
             plan = self._store.pop(key, None)
             if plan is None:
                 return False
-            self._drop_family_member(key, self._key_family.pop(key))
+            self._drop_family_member_locked(key, self._key_family.pop(key))
             return True
 
     def insert(self, key: str, plan: Plan) -> None:
@@ -1009,7 +1022,7 @@ class PlanCache:
         if old_family is not None and old_family != family:
             # Overwrite with a different-family plan (hand-inserted key).
             del self._key_family[key]
-            self._drop_family_member(key, old_family)
+            self._drop_family_member_locked(key, old_family)
         self._store[key] = plan
         self._store.move_to_end(key)
         if key not in self._key_family:
@@ -1019,9 +1032,9 @@ class PlanCache:
         self._family[family] = key
         while len(self._store) > self.capacity:
             evicted, _ = self._store.popitem(last=False)
-            self._drop_family_member(evicted, self._key_family.pop(evicted))
+            self._drop_family_member_locked(evicted, self._key_family.pop(evicted))
 
-    def _drop_family_member(self, key: str, family: str) -> None:
+    def _drop_family_member_locked(self, key: str, family: str) -> None:
         """Keep the family index in lockstep with the LRU store: without
         this, long-running serving grows ``_family`` without bound and a
         stale family -> evicted-key pointer silently turns every warm start

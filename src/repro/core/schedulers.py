@@ -34,6 +34,7 @@ from typing import ClassVar, Dict, List, Optional, Tuple, Type
 
 import numpy as np
 
+from ..analysis.locks import check_forbidden
 from .birkhoff import (
     AUTO_EXACT_MAX_N,
     DecompositionState,
@@ -126,6 +127,7 @@ class Scheduler(abc.ABC):
 
     def synthesize(self, w: Workload,
                    fingerprint: Optional[str] = None) -> Plan:
+        check_forbidden("synthesize")
         t0 = time.perf_counter()
         out = self.plan_phases(w)
         synth = time.perf_counter() - t0

@@ -32,17 +32,14 @@ import traceback
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..configs import SHAPES, get_config, list_archs, skip_reason
-from ..models import build_model
 from ..models.model import input_specs
 from .mesh import make_production_mesh
 from .roofline import CollectiveStats, parse_collectives, roofline_terms
 from .serve import make_prefill_step, make_serve_step, serve_state_shapes
-from .shardings import batch_shardings, cache_shardings, param_shardings
-from .train import TrainOptions, make_train_state_shapes, make_train_step
+from .shardings import batch_shardings
+from .train import TrainOptions, make_train_step
 
 
 def _lower_cell(cfg, shape, mesh, a2a_impl: Optional[str] = None,

@@ -15,11 +15,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..configs import ModelConfig, get_config, smoke_config
 from ..models import build_model, use_mesh_rules
-from .shardings import batch_shardings, cache_shardings, param_shardings
+from .shardings import cache_shardings, param_shardings
 from .train import make_dist_context, make_rules
 
 __all__ = ["make_serve_step", "make_prefill_step", "serve_state_shapes"]

@@ -16,8 +16,6 @@ Conventions (production mesh: pod x data x model):
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 

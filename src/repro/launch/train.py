@@ -13,22 +13,19 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
 
 from ..configs import ModelConfig, get_config, smoke_config
 from ..models import DistContext, MeshRules, build_model, choose_ep_axes, \
     use_mesh_rules
-from ..models.model import input_specs
 from ..optim import AdamWConfig, adamw_update, cosine_schedule, \
     init_opt_state
-from .mesh import dp_axes, make_mesh, slow_axis
-from .shardings import batch_shardings, param_shardings, state_shardings
+from .mesh import dp_axes, slow_axis
+from .shardings import batch_shardings, state_shardings
 
 __all__ = ["make_dist_context", "make_rules", "make_train_step",
            "make_train_state_shapes", "TrainOptions"]
@@ -174,10 +171,6 @@ def _compress_pod_grads(grads, dist: DistContext):
     the quantization residual is re-derived per step inside the island;
     see repro.comm.collectives for the stateful carry variant used in the
     examples)."""
-    from functools import partial as _p
-
-    from jax.sharding import PartitionSpec as P
-
     from ..comm.collectives import ef_compressed_psum
 
     def island(g):

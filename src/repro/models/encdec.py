@@ -8,7 +8,7 @@ learned positional embeddings, pre-LN, GELU MLPs, tied embedding head.
 
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +18,6 @@ from .dist import DistContext
 from .layers import (
     attention_apply,
     attention_decode,
-    dense_init,
     embed_init,
     init_attention,
     init_mlp,
@@ -26,7 +25,6 @@ from .layers import (
     mha_einsum,
     mlp_apply,
     norm_apply,
-    _band_mask,
     _repeat_kv,
 )
 

@@ -7,13 +7,12 @@ every assigned architecture is reachable through it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.registry import ModelConfig
-from .dist import DistContext
 from . import encdec, transformer
 
 __all__ = ["Model", "build_model", "input_specs"]

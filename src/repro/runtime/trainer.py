@@ -22,7 +22,7 @@ import os
 import signal
 import statistics
 import time
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 

@@ -25,9 +25,9 @@ any event at or below the version it has already applied.
 from __future__ import annotations
 
 import dataclasses
-import threading
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..analysis.locks import make_lock
 from ..core.topology import Topology
 
 __all__ = [
@@ -116,7 +116,7 @@ class FabricMonitor:
     """
 
     def __init__(self, topology: Topology):
-        self._lock = threading.Lock()
+        self._lock = make_lock("FabricMonitor._lock")
         self._topology = topology
         self._version = 0
         self._subscribers: List[Callable[[FabricEvent, Topology], None]] = []
@@ -131,6 +131,16 @@ class FabricMonitor:
         """The live topology after every injected event."""
         with self._lock:
             return self._topology
+
+    def snapshot(self) -> Tuple[int, Topology]:
+        """``(version, topology)`` from one critical section -- the two
+        reads cannot tear across a concurrent ``inject``.  Consumers
+        adopting the fabric (``PlanServer.attach_monitor``) use this so
+        they never hold their own lock while reading the monitor (the
+        monitor notifies *them* under its lock; nesting the other way
+        would close a lock-order cycle)."""
+        with self._lock:
+            return self._version, self._topology
 
     def history(self) -> List[FabricEvent]:
         with self._lock:

@@ -23,13 +23,13 @@ Two policies compose with the PlanCache's LRU rather than replacing it:
 
 from __future__ import annotations
 
-import threading
 import time
 from collections import OrderedDict
 from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.locks import make_lock
 from ..core.plan import PlanCache, cluster_family_key
 from ..core.traffic import Workload
 
@@ -50,7 +50,7 @@ class TTLPolicy:
             raise ValueError("ttl_seconds must be positive (or None)")
         self.ttl_seconds = ttl_seconds
         self._clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("TTLPolicy._lock")
         self._born: "OrderedDict[str, float]" = OrderedDict()
 
     def note_insert(self, key: str) -> None:
@@ -110,7 +110,7 @@ class DriftPredictor:
         if max_families < 1:
             raise ValueError("max_families must be >= 1")
         self.max_families = max_families
-        self._lock = threading.Lock()
+        self._lock = make_lock("DriftPredictor._lock")
         # family key -> (workload template, [prev_matrix, last_matrix],
         #                algorithm)
         self._families: "OrderedDict[str, Tuple[Workload, List[np.ndarray], str]]"  # noqa: E501

@@ -36,6 +36,7 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, Mapping, Optional, Union
 
+from ..analysis.locks import make_condition, make_lock
 from ..core.plan import Plan
 from ..core.traffic import Workload
 
@@ -94,7 +95,7 @@ class PlanTicket:
 
     def __init__(self):
         self._event = threading.Event()
-        self._lock = threading.Lock()
+        self._lock = make_lock("PlanTicket._lock")
         self._answer = None
         self._exc: Optional[BaseException] = None
 
@@ -143,6 +144,12 @@ class PlanRequest:
     kind: str = "plan"
     key: str = ""  # traffic fingerprint, filled by the server
     created: float = 0.0  # queue clock timestamp, stamped at put()
+    # Latency clock origin (time.perf_counter domain), stamped at
+    # construction so *every* request carries one -- the telemetry path
+    # reads it unconditionally, and a missing stamp is a loud
+    # AttributeError instead of a silently-recorded ~0s latency.
+    t_start: float = dataclasses.field(
+        default_factory=time.perf_counter)
     ticket: Optional[PlanTicket] = None
     # Upgrade jobs remember the plan they are replacing, so telemetry can
     # prove the exact plan actually displaced a warm-repaired one.
@@ -194,8 +201,9 @@ class TieredQueue:
         self.stale_after = _normalize_stale(stale_after)
         self._clock = clock
         self._on_shed = on_shed
-        self._lock = threading.Lock()
-        self._not_empty = threading.Condition(self._lock)
+        self._lock = make_lock("TieredQueue._lock")
+        self._not_empty = make_condition("TieredQueue._not_empty",
+                                         self._lock)
         self._tiers: Dict[Tier, Deque[PlanRequest]] = {
             t: deque() for t in Tier}
         self._count = 0

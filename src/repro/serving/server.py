@@ -53,6 +53,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Union
 
+from ..analysis.locks import make_lock
 from ..core.plan import (
     Plan,
     PlanCache,
@@ -154,7 +155,7 @@ class PlanServer:
                           else DriftPredictor())
         self._n_workers = workers
         self._threads: List[threading.Thread] = []
-        self._lock = threading.Lock()
+        self._lock = make_lock("PlanServer._lock")
         self._inflight: Dict[str, List[PlanRequest]] = {}
         self._background_keys: set = set()  # queued upgrade/prewarm keys
         self._inexact: set = set()          # cached keys awaiting upgrade
@@ -241,8 +242,8 @@ class PlanServer:
             self._resolve_hit(ticket, plan, key, t_start, tier, w, algorithm)
             return ticket
         req = PlanRequest(workload=w, algorithm=algorithm, tier=tier,
-                          kind="plan", key=key, ticket=ticket)
-        req.t_start = t_start
+                          kind="plan", key=key, ticket=ticket,
+                          t_start=t_start)
         self.queue.put(req)  # raises AdmissionError when saturated
         self.telemetry.observe_queue_depth(self.queue.depth())
         return ticket
@@ -267,16 +268,48 @@ class PlanServer:
                 snap["fabric"]["topology"] = self._active_topo.fingerprint()
         return snap
 
+    def audit(self) -> Dict:
+        """Run the workload-independent plan verifier over the live cache.
+
+        Walks every family head (``cache.family_heads()``) through
+        ``analysis.planlint``: incast-freedom, self-traffic, slot
+        feasibility, stage ordering, topology consistency, and
+        family-index agreement -- the FAST structural guarantees, checked
+        on the plans this daemon is actually serving rather than on a
+        workload-coupled ``validate`` at synthesis time.  Returns the
+        planlint report (``{"plans", "clean", "issues": [...]}``); the
+        ``audits``/``audit_issues`` counters land in telemetry so a soak
+        or an operator snapshot shows at a glance whether a degraded
+        route ever cached a structurally bad plan.
+        """
+        from ..analysis import planlint
+
+        report = planlint.audit_cache(self.cache)
+        self.telemetry.count("audits")
+        if report["issues"]:
+            self.telemetry.count("audit_issues", len(report["issues"]))
+        return report
+
     # -- fabric events -----------------------------------------------------
 
     def attach_monitor(self, monitor: FabricMonitor) -> "PlanServer":
         """Adopt ``monitor``'s fabric as active and subscribe to its
         events; every later ``inject`` flows into ``apply_fabric_event``
         (strictly version-ordered -- the monitor notifies under its
-        lock)."""
+        lock).
+
+        The monitor state is snapshotted *before* taking the server
+        lock: ``inject`` acquires FabricMonitor._lock then (via this
+        subscription) PlanServer._lock, so reading the monitor while
+        holding the server lock would acquire the same two locks in the
+        opposite order -- a deadlock window the lock-order analysis
+        flags as a cycle.  An event injected between the snapshot and
+        the subscribe is not lost: the next delivered event carries the
+        authoritative post-event topology explicitly."""
+        version, topo = monitor.snapshot()
         with self._lock:
-            self._active_topo = monitor.current()
-            self._fabric_version = monitor.version
+            self._active_topo = topo
+            self._fabric_version = version
         monitor.subscribe(self.apply_fabric_event)
         return self
 
@@ -588,8 +621,12 @@ class PlanServer:
     def _answer(self, req: PlanRequest, plan: Plan, source: str,
                 exact: bool) -> None:
         self.telemetry.count({"hit": "hits"}.get(source, source))
-        latency = time.perf_counter() - getattr(req, "t_start",
-                                                time.perf_counter())
+        # t_start is stamped at PlanRequest construction: a request
+        # without one is a bug, and reading the attribute directly makes
+        # it a loud AttributeError instead of a silently-recorded ~0s
+        # latency (the old getattr fallback compared perf_counter to
+        # itself).
+        latency = time.perf_counter() - req.t_start
         self.telemetry.observe_latency(req.tier.name, latency)
         if req.ticket is not None:
             req.ticket.resolve(PlanAnswer(

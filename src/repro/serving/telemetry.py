@@ -27,10 +27,11 @@ section 2):
 from __future__ import annotations
 
 import json
-import threading
 from typing import Dict, List
 
 import numpy as np
+
+from ..analysis.locks import make_lock
 
 __all__ = ["Telemetry", "LatencyReservoir"]
 
@@ -96,7 +97,7 @@ class Telemetry:
     """Thread-safe serving metrics with an atomic JSON snapshot."""
 
     def __init__(self, latency_capacity: int = 4096):
-        self._lock = threading.Lock()
+        self._lock = make_lock("Telemetry._lock")
         self._counters: Dict[str, int] = {}
         self._latency: Dict[str, LatencyReservoir] = {}
         self._latency_capacity = latency_capacity

@@ -1,0 +1,378 @@
+"""Static analysis passes (issue 9): each AST rule fires on a seeded
+violation, suppression works, the repo tree is clean, and the plan
+verifier catches injected structural defects."""
+
+import dataclasses
+import json
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.analysis import astlint, planlint
+from repro.analysis.corpus import emit_corpus
+from repro.core.plan import PermutationBlock, PermutationStage
+from repro.core.schedulers import get_scheduler
+from repro.core.traffic import ClusterSpec, balanced_workload
+
+SRC_ROOT = "src"
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# -- LCK001 ---------------------------------------------------------------
+
+def test_lck001_raw_lock():
+    src = "import threading\nlock = threading.Lock()\n"
+    assert _rules(astlint.lint_source(src)) == ["LCK001"]
+
+
+def test_lck001_raw_rlock_and_condition():
+    src = ("import threading\n"
+           "a = threading.RLock()\n"
+           "b = threading.Condition()\n")
+    assert _rules(astlint.lint_source(src)) == ["LCK001", "LCK001"]
+
+
+def test_lck001_bare_import_form():
+    src = "from threading import Lock\nlock = Lock()\n"
+    assert _rules(astlint.lint_source(src)) == ["LCK001"]
+
+
+def test_lck001_event_not_flagged():
+    src = "import threading\nev = threading.Event()\n"
+    assert astlint.lint_source(src) == []
+
+
+def test_lck001_noqa_suppression():
+    src = "import threading\nlock = threading.Lock()  # noqa: LCK001\n"
+    assert astlint.lint_source(src) == []
+    src2 = "import threading\nlock = threading.Lock()  # noqa\n"
+    assert astlint.lint_source(src2) == []
+
+
+def test_factory_call_not_flagged():
+    src = ("from repro.analysis.locks import make_lock\n"
+           "lock = make_lock('X._lock')\n")
+    assert astlint.lint_source(src) == []
+
+
+# -- LCK002 ---------------------------------------------------------------
+
+_SPEC = {"Telemetry": ("_lock", frozenset({"_counters", "_count"}))}
+
+
+def _lck002(src):
+    return astlint.lint_source(src, guard_specs=_SPEC,
+                               check_lck001=False)
+
+
+def test_lck002_unlocked_write_flagged():
+    src = ("class Telemetry:\n"
+           "    def bump(self):\n"
+           "        self._counters['x'] = 1\n")
+    assert _rules(_lck002(src)) == ["LCK002"]
+
+
+def test_lck002_locked_write_clean():
+    src = ("class Telemetry:\n"
+           "    def bump(self):\n"
+           "        with self._lock:\n"
+           "            self._counters['x'] = 1\n")
+    assert _lck002(src) == []
+
+
+def test_lck002_init_exempt():
+    src = ("class Telemetry:\n"
+           "    def __init__(self):\n"
+           "        self._counters = {}\n")
+    assert _lck002(src) == []
+
+
+def test_lck002_locked_suffix_exempt():
+    src = ("class Telemetry:\n"
+           "    def _bump_locked(self):\n"
+           "        self._counters['x'] = 1\n")
+    assert _lck002(src) == []
+
+
+def test_lck002_mutator_call_flagged():
+    src = ("class Telemetry:\n"
+           "    def bump(self):\n"
+           "        self._counters.update(a=1)\n")
+    assert _rules(_lck002(src)) == ["LCK002"]
+
+
+def test_lck002_augassign_flagged():
+    src = ("class Telemetry:\n"
+           "    def bump(self):\n"
+           "        self._count += 1\n")
+    assert _rules(_lck002(src)) == ["LCK002"]
+
+
+def test_lck002_delete_flagged():
+    src = ("class Telemetry:\n"
+           "    def drop(self):\n"
+           "        del self._counters['x']\n")
+    assert _rules(_lck002(src)) == ["LCK002"]
+
+
+def test_lck002_unregistered_attr_clean():
+    src = ("class Telemetry:\n"
+           "    def bump(self):\n"
+           "        self._other = 1\n")
+    assert _lck002(src) == []
+
+
+def test_lck002_unregistered_class_clean():
+    src = ("class Whatever:\n"
+           "    def bump(self):\n"
+           "        self._counters['x'] = 1\n")
+    assert _lck002(src) == []
+
+
+# -- EXC001 ---------------------------------------------------------------
+
+def test_exc001_swallow_flagged():
+    src = ("try:\n    pass\nexcept Exception:\n    pass\n")
+    assert _rules(astlint.lint_source(src)) == ["EXC001"]
+
+
+def test_exc001_bare_except_flagged():
+    src = ("try:\n    pass\nexcept:\n    x = 1\n")
+    assert _rules(astlint.lint_source(src)) == ["EXC001"]
+
+
+def test_exc001_reraise_clean():
+    src = ("try:\n    pass\nexcept BaseException:\n    raise\n")
+    assert astlint.lint_source(src) == []
+
+
+def test_exc001_telemetry_count_clean():
+    src = ("try:\n    pass\nexcept Exception:\n"
+           "    tel.count('errors')\n")
+    assert astlint.lint_source(src) == []
+
+
+def test_exc001_capture_clean():
+    src = ("err = None\ntry:\n    pass\nexcept BaseException as e:\n"
+           "    err = e\n")
+    assert astlint.lint_source(src) == []
+
+
+def test_exc001_narrow_except_clean():
+    src = ("try:\n    pass\nexcept ValueError:\n    pass\n")
+    assert astlint.lint_source(src) == []
+
+
+# -- DET001 ---------------------------------------------------------------
+
+def test_det001_wall_clock_flagged():
+    src = "import time\nt = time.time()\n"
+    fs = astlint.lint_source(src, check_det001=True, check_lck001=False)
+    assert _rules(fs) == ["DET001"]
+
+
+def test_det001_unseeded_np_random_flagged():
+    src = "import numpy as np\nx = np.random.rand(3)\n"
+    fs = astlint.lint_source(src, check_det001=True, check_lck001=False)
+    assert _rules(fs) == ["DET001"]
+
+
+def test_det001_seeded_rng_and_perf_counter_clean():
+    src = ("import time\nimport numpy as np\n"
+           "rng = np.random.default_rng(0)\n"
+           "t = time.perf_counter()\nm = time.monotonic()\n")
+    assert astlint.lint_source(src, check_det001=True,
+                               check_lck001=False) == []
+
+
+def test_det001_off_outside_core():
+    src = "import time\nt = time.time()\n"
+    assert astlint.lint_source(src, check_det001=False) == []
+
+
+# -- the repo itself is clean --------------------------------------------
+
+def test_repo_tree_clean():
+    findings = astlint.lint_tree(SRC_ROOT)
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+# -- planlint -------------------------------------------------------------
+
+C = ClusterSpec(4, 2)
+
+
+def _plan():
+    return get_scheduler("flash").synthesize(balanced_workload(C, 1e6))
+
+
+def _codes(issues):
+    return [i["code"] for i in issues]
+
+
+def test_planlint_clean_plan():
+    assert planlint.check_plan(_plan()) == []
+
+
+def test_planlint_all_schedulers_clean():
+    w = balanced_workload(C, 1e6)
+    from repro.core.schedulers import SCHEDULERS
+    for name in sorted(SCHEDULERS):
+        plan = get_scheduler(name).synthesize(w)
+        issues = planlint.check_plan(plan, source=name)
+        assert issues == [], issues
+
+
+def test_planlint_injected_incast():
+    plan = _plan()
+    bad_stage = PermutationStage(perm=(1, 0, 0, -1), size=10.0,
+                                 sent=(10.0, 10.0, 10.0, 0.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (bad_stage,))
+    issues = planlint.check_plan(bad)
+    assert "PLAN-STRUCT" in _codes(issues)
+    assert any("incast" in i["message"] for i in issues)
+
+
+def test_planlint_injected_self_traffic():
+    plan = _plan()
+    bad_stage = PermutationStage(perm=(0, 2, 1, -1), size=10.0,
+                                 sent=(10.0, 10.0, 10.0, 0.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (bad_stage,))
+    issues = planlint.check_plan(bad)
+    assert any("self-traffic" in i["message"] for i in issues)
+
+
+def test_planlint_injected_slot_overflow():
+    plan = _plan()
+    bad_stage = PermutationStage(perm=(1, 2, 3, 0), size=5.0,
+                                 sent=(10.0, 1.0, 1.0, 1.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (bad_stage,))
+    issues = planlint.check_plan(bad)
+    assert any("exceeds slot size" in i["message"] for i in issues)
+
+
+def test_planlint_descending_stage_order():
+    plan = _plan()
+    s1 = PermutationStage(perm=(1, 2, 3, 0), size=100.0, sent=(100.0,) * 4)
+    s2 = PermutationStage(perm=(2, 3, 0, 1), size=10.0, sent=(10.0,) * 4)
+    bad = dataclasses.replace(plan, phases=(s1, s2))
+    issues = planlint.check_plan(bad)
+    assert "PLAN-ORDER" in _codes(issues)
+
+
+def test_planlint_block_exempt_from_order():
+    """Repair blocks keep stored order by design: no PLAN-ORDER issue."""
+    plan = _plan()
+    block = PermutationBlock(
+        perms=np.array([[1, 2, 3, 0], [2, 3, 0, 1]]),
+        sizes=np.array([100.0, 10.0]),
+        sent=np.array([[100.0] * 4, [10.0] * 4]))
+    bad = dataclasses.replace(plan, phases=(block,))
+    assert "PLAN-ORDER" not in _codes(planlint.check_plan(bad))
+
+
+def test_planlint_shape_mismatch():
+    plan = _plan()
+    short = PermutationStage(perm=(1, 0), size=1.0, sent=(1.0, 1.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (short,))
+    issues = planlint.check_plan(bad)
+    assert "PLAN-SHAPE" in _codes(issues)
+
+
+def test_planlint_file_roundtrip(tmp_path):
+    plan = _plan()
+    path = tmp_path / "plan.json"
+    path.write_text(json.dumps(plan.to_dict()))
+    assert planlint.check_file(str(path)) == []
+
+
+def test_planlint_file_with_bad_plan(tmp_path):
+    plan = _plan()
+    bad_stage = PermutationStage(perm=(1, 0, 0, -1), size=10.0,
+                                 sent=(10.0, 10.0, 10.0, 0.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (bad_stage,))
+    path = tmp_path / "plans.json"
+    path.write_text(json.dumps([plan.to_dict(), bad.to_dict()]))
+    issues = planlint.check_file(str(path))
+    assert issues and all("[1]" in i["source"] for i in issues)
+
+
+def test_planlint_unreadable_file(tmp_path):
+    path = tmp_path / "garbage.json"
+    path.write_text("{not json")
+    issues = planlint.check_file(str(path))
+    assert _codes(issues) == ["PLAN-IO"]
+
+
+def test_audit_cache_clean_and_family_mismatch():
+    from repro.core.plan import PlanCache, plan_family_key
+
+    cache = PlanCache(capacity=8)
+    plan = _plan()
+    cache.insert("k1", plan)
+    rep = planlint.audit_cache(cache)
+    assert rep["clean"] and rep["plans"] == 1
+
+    # Corrupt the family index: point a foreign family key at the plan.
+    with cache._lock:
+        cache._family["deadbeef" * 4] = "k1"
+        cache._family_count["deadbeef" * 4] = 1
+    rep = planlint.audit_cache(cache)
+    assert not rep["clean"]
+    assert any(i["code"] == "CACHE-FAMILY" for i in rep["issues"])
+    assert plan_family_key(plan) != "deadbeef" * 4
+
+
+# -- corpus + CLI gate ----------------------------------------------------
+
+def test_corpus_emission_and_check(tmp_path):
+    out = tmp_path / "corpus"
+    written = emit_corpus(str(out), algorithms=["flash", "fanout"])
+    assert len(written) == 5
+    result = planlint.check_paths([str(out)])
+    assert result["clean"], result["issues"]
+    assert result["plans"] == 10  # 5 workloads x 2 algorithms
+
+
+def test_cli_gate_exits_zero_on_clean_corpus(tmp_path):
+    out = tmp_path / "corpus"
+    emit_corpus(str(out), algorithms=["flash"])
+    report = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--planlint",
+         "--corpus", str(out), "--json", str(report)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    data = json.loads(report.read_text())
+    assert data["clean"] is True
+    assert data["passes"]["planlint"]["plans"] == 5
+
+
+def test_cli_gate_fails_on_injected_incast(tmp_path):
+    plan = _plan()
+    bad_stage = PermutationStage(perm=(1, 0, 0, -1), size=10.0,
+                                 sent=(10.0, 10.0, 10.0, 0.0))
+    bad = dataclasses.replace(plan, phases=plan.phases + (bad_stage,))
+    out = tmp_path / "corpus"
+    out.mkdir()
+    (out / "bad.json").write_text(json.dumps([bad.to_dict()]))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--planlint",
+         "--corpus", str(out)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 1
+    assert "incast" in proc.stdout
+
+
+def test_cli_astlint_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--astlint"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr

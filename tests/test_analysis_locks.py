@@ -1,0 +1,311 @@
+"""Lock tracking and guarded-state analysis (issue 9): tracked factories,
+the lock-order graph, cycle detection, forbidden-while-held contracts,
+and dynamic guarded-attribute checking."""
+
+import threading
+
+import pytest
+
+from repro.analysis import guards, locks
+from repro.analysis.locks import (
+    TrackedLock,
+    TrackedRLock,
+    make_condition,
+    make_lock,
+    make_rlock,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_analysis():
+    locks.reset()
+    locks.disable()
+    yield
+    locks.reset()
+    locks.disable()
+
+
+# -- factories ------------------------------------------------------------
+
+def test_factories_passthrough_when_disabled():
+    assert not locks.enabled()
+    lk = make_lock("X._lock")
+    assert not isinstance(lk, TrackedLock)
+    # Plain primitive: behaves like threading.Lock.
+    with lk:
+        pass
+    rlk = make_rlock("X._rlock")
+    assert not isinstance(rlk, TrackedRLock)
+    with rlk:
+        with rlk:
+            pass
+
+
+def test_factories_tracked_when_enabled():
+    locks.enable()
+    lk = make_lock("X._lock")
+    assert isinstance(lk, TrackedLock)
+    assert lk.name == "X._lock"
+    rlk = make_rlock("X._rlock")
+    assert isinstance(rlk, TrackedRLock)
+
+
+def test_tracked_lock_held_by_current_thread():
+    locks.enable()
+    lk = make_lock("X._lock")
+    assert not lk.held_by_current_thread()
+    with lk:
+        assert lk.held_by_current_thread()
+    assert not lk.held_by_current_thread()
+
+
+def test_tracked_rlock_reentrant():
+    locks.enable()
+    rlk = make_rlock("X._rlock")
+    with rlk:
+        with rlk:
+            assert rlk.held_by_current_thread()
+        assert rlk.held_by_current_thread()
+    assert not rlk.held_by_current_thread()
+
+
+def test_condition_over_tracked_lock():
+    locks.enable()
+    lk = make_lock("X._lock")
+    cond = make_condition("X._cond", lk)
+    hit = []
+
+    def waiter():
+        with cond:
+            cond.wait(timeout=5.0)
+            hit.append(True)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    # Let the waiter block, then wake it.
+    import time
+    time.sleep(0.05)
+    with cond:
+        cond.notify()
+    t.join(timeout=5.0)
+    assert hit == [True]
+    assert not lk.held_by_current_thread()
+
+
+def test_condition_over_tracked_rlock():
+    locks.enable()
+    rlk = make_rlock("X._rlock")
+    cond = make_condition("X._cond", rlk)
+    with cond:
+        cond.notify_all()
+    assert not rlk.held_by_current_thread()
+
+
+# -- lock-order graph -----------------------------------------------------
+
+def test_edges_recorded_for_nested_acquisition():
+    locks.enable()
+    a = make_lock("A")
+    b = make_lock("B")
+    with a:
+        with b:
+            pass
+    assert ("A", "B") in locks.lock_order_edges()
+    assert ("B", "A") not in locks.lock_order_edges()
+    assert locks.find_cycles() == []
+    locks.assert_acyclic()
+
+
+def test_no_edge_without_nesting():
+    locks.enable()
+    a = make_lock("A")
+    b = make_lock("B")
+    with a:
+        pass
+    with b:
+        pass
+    assert locks.lock_order_edges() == {}
+
+
+def test_reentrant_rlock_records_no_self_edge():
+    locks.enable()
+    r = make_rlock("R")
+    with r:
+        with r:
+            pass
+    assert ("R", "R") not in locks.lock_order_edges()
+
+
+def test_cycle_detected():
+    locks.enable()
+    a = make_lock("A")
+    b = make_lock("B")
+    # Thread 1 order A->B; thread 2 order B->A (sequentially, so no
+    # actual deadlock -- the graph still records the hazard).
+    with a:
+        with b:
+            pass
+
+    def reversed_order():
+        with b:
+            with a:
+                pass
+
+    t = threading.Thread(target=reversed_order)
+    t.start()
+    t.join()
+    cycles = locks.find_cycles()
+    assert cycles, "A->B->A cycle must be reported"
+    witness = cycles[0]
+    assert witness[0] == witness[-1]
+    assert set(witness) >= {"A", "B"}
+    with pytest.raises(AssertionError):
+        locks.assert_acyclic()
+
+
+def test_three_lock_cycle():
+    locks.enable()
+    a, b, c = make_lock("A"), make_lock("B"), make_lock("C")
+    for first, second in ((a, b), (b, c), (c, a)):
+        with first:
+            with second:
+                pass
+    assert locks.find_cycles()
+
+
+# -- forbidden-while-held contracts ---------------------------------------
+
+def test_check_forbidden_records_violation():
+    locks.enable()
+    cache_lock = make_lock("PlanCache._lock")
+    with cache_lock:
+        locks.check_forbidden("birkhoff_decompose")
+    vs = locks.violations()
+    assert len(vs) == 1
+    assert vs[0].kind == "forbidden_call"
+    assert vs[0].lock == "PlanCache._lock"
+    assert vs[0].operation == "birkhoff_decompose"
+    with pytest.raises(AssertionError):
+        locks.assert_clean()
+
+
+def test_check_forbidden_clean_outside_lock():
+    locks.enable()
+    make_lock("PlanCache._lock")  # constructed but not held
+    locks.check_forbidden("birkhoff_decompose")
+    assert locks.violations() == []
+    locks.assert_clean()
+
+
+def test_check_forbidden_ignores_unlisted_locks():
+    locks.enable()
+    lk = make_lock("Harmless._lock")
+    with lk:
+        locks.check_forbidden("synthesize")
+    assert locks.violations() == []
+
+
+def test_check_forbidden_noop_when_disabled():
+    lk = make_lock("PlanCache._lock")
+    with lk:
+        locks.check_forbidden("synthesize")
+    assert locks.violations() == []
+
+
+def test_real_decompose_under_cache_lock_is_flagged():
+    """The instrumented entry point itself fires the contract."""
+    import numpy as np
+
+    from repro.core.birkhoff import birkhoff_decompose
+    from repro.core.plan import PlanCache
+
+    locks.enable()
+    cache = PlanCache(capacity=4)
+    t = np.array([[0.0, 1.0], [1.0, 0.0]])
+    with cache._lock:
+        birkhoff_decompose(t)
+    assert any(v.lock == "PlanCache._lock" for v in locks.violations())
+
+
+def test_report_schema():
+    locks.enable()
+    a = make_lock("A")
+    with a:
+        pass
+    rep = locks.report()
+    assert rep["enabled"] is True
+    assert "edges" in rep and "cycles" in rep and "violations" in rep
+
+
+# -- guarded-state registry -----------------------------------------------
+
+def test_registry_covers_serving_classes():
+    classes = {(s.module, s.cls_name) for s in guards.REGISTRY}
+    assert ("repro.serving.server", "PlanServer") in classes
+    assert ("repro.core.plan", "PlanCache") in classes
+    assert ("repro.serving.queue", "TieredQueue") in classes
+    assert ("repro.serving.telemetry", "Telemetry") in classes
+
+
+def test_guard_violation_on_unlocked_write():
+    from repro.serving.telemetry import Telemetry
+
+    locks.enable()
+    guards.install()
+    try:
+        tel = Telemetry()
+        tel.count("ok")  # locked write: clean
+        assert guards.guard_violations() == []
+        # Unlocked write to a registered attribute from outside.
+        tel._counters = {}
+        vs = guards.guard_violations()
+        assert len(vs) == 1
+        assert vs[0].cls_name == "Telemetry"
+        assert vs[0].attr == "_counters"
+    finally:
+        guards.uninstall()
+        guards.reset_violations()
+
+
+def test_guard_init_writes_exempt():
+    from repro.serving.telemetry import Telemetry
+
+    locks.enable()
+    guards.install()
+    try:
+        Telemetry()  # constructor writes all registered attrs, unlocked
+        assert guards.guard_violations() == []
+    finally:
+        guards.uninstall()
+        guards.reset_violations()
+
+
+def test_guard_normal_serving_flow_clean():
+    from repro.serving.queue import PlanRequest, TieredQueue
+
+    from repro.core.traffic import ClusterSpec, balanced_workload
+
+    locks.enable()
+    guards.install()
+    try:
+        q = TieredQueue(max_depth=8)
+        w = balanced_workload(ClusterSpec(2, 2), 1e3)
+        q.put(PlanRequest(workload=w, algorithm="flash"))
+        assert q.get(timeout=1.0) is not None
+        q.close()
+        assert guards.guard_violations() == []
+    finally:
+        guards.uninstall()
+        guards.reset_violations()
+
+
+def test_guard_uninstall_restores():
+    from repro.serving.telemetry import Telemetry
+
+    locks.enable()
+    guards.install()
+    guards.uninstall()
+    guards.reset_violations()
+    tel = Telemetry()
+    tel._counters = {"raw": 1}  # no longer instrumented
+    assert guards.guard_violations() == []

@@ -76,3 +76,49 @@ def test_dtype_restored_via_target(tmp_path):
     save_checkpoint(root, 3, tree)
     restored, _ = restore_checkpoint(root, tree)
     assert restored["nested"][1].dtype == jnp.bfloat16
+
+
+def test_failed_save_surfaces_original_error(tmp_path, monkeypatch):
+    """A mid-save failure propagates the genuine exception (issue 9: no
+    broad except swallowing context) and leaves no staging litter."""
+    import repro.checkpoint.checkpoint as ckpt
+
+    root = str(tmp_path)
+    boom = RuntimeError("disk on fire")
+
+    def exploding_savez(*a, **k):
+        raise boom
+
+    monkeypatch.setattr(ckpt.np, "savez", exploding_savez)
+    with pytest.raises(RuntimeError) as excinfo:
+        save_checkpoint(root, 1, _tree())
+    assert excinfo.value is boom
+    leftovers = [d for d in os.listdir(root) if d.startswith(".tmp_save_")]
+    assert leftovers == []
+    assert available_steps(root) == []
+
+
+def test_keyboard_interrupt_propagates_and_cleans(tmp_path, monkeypatch):
+    """KeyboardInterrupt mid-save must reach the caller (the old
+    `except BaseException` re-raised it, but the committed-flag pattern
+    must preserve that) while still removing the staging dir."""
+    import repro.checkpoint.checkpoint as ckpt
+
+    root = str(tmp_path)
+
+    def interrupted_savez(*a, **k):
+        raise KeyboardInterrupt
+
+    monkeypatch.setattr(ckpt.np, "savez", interrupted_savez)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(root, 1, _tree())
+    leftovers = [d for d in os.listdir(root) if d.startswith(".tmp_save_")]
+    assert leftovers == []
+
+
+def test_successful_save_keeps_no_staging(tmp_path):
+    root = str(tmp_path)
+    save_checkpoint(root, 3, _tree())
+    assert available_steps(root) == [3]
+    leftovers = [d for d in os.listdir(root) if d.startswith(".tmp_save_")]
+    assert leftovers == []

@@ -1,6 +1,5 @@
 """Multi-device collective tests (subprocess with 8 fake CPU devices)."""
 
-import pytest
 
 
 def test_all_to_all_impl_equivalence(subproc):

@@ -4,7 +4,6 @@ re-homing, worker death/respawn with conserved accounting, and the
 client's retry/backoff/deadline ladder with inline fallback.
 """
 
-import numpy as np
 import pytest
 
 from repro.core import (
@@ -22,7 +21,6 @@ from repro.serving import (
     PlanClient,
     PlanServer,
     ServerClosed,
-    Tier,
 )
 
 C = ClusterSpec(n_servers=4, m_gpus=2)

@@ -1,7 +1,5 @@
 """Beyond-paper perf knobs: correctness under the hillclimb configurations."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import pytest

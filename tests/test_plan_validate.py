@@ -1,0 +1,244 @@
+"""Exhaustive Plan.validate coverage (issue 9): every
+``PlanValidationError`` branch -- stage and block structural checks,
+slot-vs-rail feasibility, byte conservation, serialization -- fires on a
+targeted corruption and stays silent on the intact plan."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.plan import (
+    PermutationBlock,
+    PermutationStage,
+    Plan,
+    PlanValidationError,
+    uniform_nic_shares,
+)
+from repro.core.schedulers import get_scheduler
+from repro.core.topology import Topology
+from repro.core.traffic import ClusterSpec, Workload, balanced_workload
+
+C = ClusterSpec(n_servers=4, m_gpus=2)
+W = balanced_workload(C, 1e6)
+
+
+def _plan(algo="flash", w=W):
+    return get_scheduler(algo).synthesize(w)
+
+
+def _with_phases(plan, phases):
+    return dataclasses.replace(plan, phases=tuple(phases))
+
+
+def _stage(**kw):
+    defaults = dict(perm=(1, 2, 3, 0), size=10.0, sent=(10.0,) * 4)
+    defaults.update(kw)
+    return PermutationStage(**defaults)
+
+
+def _block(**kw):
+    defaults = dict(
+        perms=np.array([[1, 2, 3, 0], [3, 0, 1, 2]]),
+        sizes=np.array([10.0, 10.0]),
+        sent=np.full((2, 4), 10.0))
+    defaults.update(kw)
+    return PermutationBlock(**defaults)
+
+
+def _expect(plan, match, w=W):
+    with pytest.raises(PlanValidationError, match=match):
+        plan.validate(w)
+
+
+def test_valid_plan_passes():
+    _plan().validate(W)
+
+
+def test_validate_structure_is_workload_free():
+    """The extracted entry point needs no workload at all."""
+    _plan().validate_structure()
+    bad = _with_phases(_plan(), [_stage(perm=(1, 0, 0, -1),
+                                        sent=(10.0, 10.0, 10.0, 0.0))])
+    with pytest.raises(PlanValidationError, match="incast"):
+        bad.validate_structure()
+
+
+# -- workload-dependent branches ------------------------------------------
+
+def test_cluster_mismatch():
+    other = balanced_workload(ClusterSpec(8, 2), 1e6)
+    _expect(_plan(), "plan targets", w=other)
+
+
+def test_topology_fingerprint_mismatch():
+    degraded = Topology.from_cluster(C).degrade_nic(0, 0, 0.5, "both")
+    stale = Workload(C, W.matrix, degraded)
+    _expect(_plan(), "different topology", w=stale)
+
+
+def test_inter_bytes_not_conserved():
+    plan = _plan()
+    extra = _stage(size=1e6, sent=(1e6,) * 4)
+    _expect(_with_phases(plan, plan.phases + (extra,)),
+            "inter-server bytes not conserved")
+
+
+def test_intra_bytes_not_conserved():
+    plan = _plan()
+    dropped = [p for p in plan.phases
+               if p.payload(C)[1] == 0.0]
+    assert len(dropped) < len(plan.phases), "plan must carry intra bytes"
+    _expect(_with_phases(plan, dropped),
+            "intra-server bytes not conserved")
+
+
+# -- PermutationStage branches --------------------------------------------
+
+def test_stage_incast():
+    _expect(_with_phases(_plan(), [_stage(perm=(1, 0, 0, -1),
+                                          sent=(10.0, 10.0, 10.0, 0.0))]),
+            "incast")
+
+
+def test_stage_self_traffic():
+    _expect(_with_phases(_plan(), [_stage(perm=(0, 2, 1, -1),
+                                          sent=(10.0,) * 3 + (0.0,))]),
+            "self-traffic")
+
+
+def test_stage_negative_size():
+    _expect(_with_phases(_plan(), [_stage(size=-1.0)]),
+            "payload exceeds slot size")
+
+
+def test_stage_payload_exceeds_size():
+    _expect(_with_phases(_plan(), [_stage(sent=(20.0, 1.0, 1.0, 1.0))]),
+            "payload exceeds slot size")
+
+
+def test_stage_slots_length_mismatch():
+    _expect(_with_phases(_plan(), [_stage(slots=(10.0, 10.0))]),
+            "slot sizes")
+
+
+def test_stage_slot_exceeds_size():
+    _expect(_with_phases(_plan(), [_stage(slots=(20.0,) + (10.0,) * 3,
+                                          sent=(1.0,) * 4)]),
+            "slot exceeds the stage size")
+
+
+def test_stage_payload_exceeds_slot():
+    _expect(_with_phases(_plan(), [_stage(slots=(5.0,) + (10.0,) * 3,
+                                          sent=(8.0, 1.0, 1.0, 1.0))]),
+            "exceeds its per-sender slot")
+
+
+# -- PermutationBlock branches --------------------------------------------
+
+def test_block_shape_disagreement():
+    _expect(_with_phases(_plan(), [_block(sizes=np.array([10.0]))]),
+            "arrays disagree")
+
+
+def test_block_dst_out_of_range():
+    _expect(_with_phases(
+        _plan(), [_block(perms=np.array([[1, 2, 3, 9], [3, 0, 1, 2]]))]),
+        "destination out of range")
+
+
+def test_block_incast():
+    _expect(_with_phases(
+        _plan(), [_block(perms=np.array([[1, 1, 3, -1], [3, 0, 1, 2]]))]),
+        "incast")
+
+
+def test_block_self_traffic():
+    _expect(_with_phases(
+        _plan(), [_block(perms=np.array([[0, 2, 3, 1], [3, 0, 1, 2]]))]),
+        "self-traffic")
+
+
+def test_block_payload_exceeds_size():
+    _expect(_with_phases(
+        _plan(), [_block(sent=np.full((2, 4), 20.0))]),
+        "payload exceeds slot size")
+
+
+def test_block_slots_shape_mismatch():
+    _expect(_with_phases(
+        _plan(), [_block(slots=np.full((1, 4), 10.0))]),
+        "slot sizes")
+
+
+def test_block_slot_exceeds_size():
+    _expect(_with_phases(
+        _plan(), [_block(slots=np.full((2, 4), 20.0),
+                         sent=np.full((2, 4), 1.0))]),
+        "slot exceeds the stage size")
+
+
+def test_block_payload_exceeds_slot():
+    _expect(_with_phases(
+        _plan(), [_block(slots=np.full((2, 4), 5.0),
+                         sent=np.full((2, 4), 8.0),
+                         sizes=np.array([10.0, 10.0]))]),
+        "exceeds its per-sender slot")
+
+
+# -- slot-vs-rail feasibility ---------------------------------------------
+
+def _ca_setup():
+    """A capacity-aware plan on a degraded fabric."""
+    topo = Topology.from_cluster(C).degrade_nic(1, 0, 0.25, "both")
+    w = Workload(C, W.matrix, topo)
+    return get_scheduler("flash_ca").synthesize(w), w
+
+
+def test_capacity_aware_valid():
+    plan, w = _ca_setup()
+    assert plan.capacity_aware
+    plan.validate(w)
+
+
+def test_stage_slot_vs_rail_infeasible():
+    plan, w = _ca_setup()
+    # Grafting uniform shares onto the degraded fabric's slots makes a
+    # rail of the degraded pair need longer than the stage window.
+    bad = dataclasses.replace(
+        plan, nic_shares=uniform_nic_shares(C.n_servers, C.m_gpus))
+    with pytest.raises(PlanValidationError, match="slot-vs-rail"):
+        bad.validate(w)
+
+
+def test_block_slot_vs_rail_infeasible():
+    plan, w = _ca_setup()
+    stages = [p for p in plan.phases if isinstance(p, PermutationStage)]
+    assert stages, "capacity-aware cold plan emits PermutationStages"
+    rest = [p for p in plan.phases
+            if not isinstance(p, PermutationStage)]
+    block = PermutationBlock(
+        perms=np.array([s.perm for s in stages]),
+        sizes=np.array([s.size for s in stages]),
+        sent=np.array([s.sent for s in stages]),
+        slots=np.array([s.slots if s.slots is not None
+                        else (s.size,) * C.n_servers for s in stages]))
+    as_block = dataclasses.replace(
+        plan, phases=tuple(rest) + (block,),
+        nic_shares=uniform_nic_shares(C.n_servers, C.m_gpus))
+    with pytest.raises(PlanValidationError, match="slot-vs-rail"):
+        as_block.validate(w)
+
+
+# -- serialization --------------------------------------------------------
+
+def test_unknown_phase_kind():
+    d = _plan().to_dict()
+    d["phases"][0]["kind"] = "warp_drive"
+    with pytest.raises(PlanValidationError, match="unknown phase kind"):
+        Plan.from_dict(d)
+
+
+def test_roundtrip_still_validates():
+    plan = _plan()
+    Plan.from_dict(plan.to_dict()).validate(W)

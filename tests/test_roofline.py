@@ -3,7 +3,6 @@
 import pytest
 
 from repro.launch.roofline import (
-    HW,
     CollectiveStats,
     parse_collectives,
     roofline_terms,

@@ -532,3 +532,39 @@ def test_server_accounts_rejected_requests():
     finally:
         srv._running = False
         srv.queue.close()
+
+
+def test_request_latency_origin_always_stamped():
+    """Every PlanRequest carries a t_start from construction (issue 9):
+    the telemetry path reads it unconditionally instead of silently
+    substituting 'now' (which recorded ~0s latencies for requests that
+    ever missed the stamp)."""
+    w = _w()
+    req = PlanRequest(workload=w, algorithm="flash")
+    assert req.t_start > 0.0
+    assert req.t_start <= time.perf_counter()
+
+
+def test_missing_latency_origin_fails_loudly():
+    """A request stripped of its t_start must blow up in telemetry, not
+    record a fake latency."""
+    with PlanServer(workers=1, prewarm=False) as srv:
+        w = _w()
+        ticket = srv.submit(w)
+        assert ticket.result(timeout=30.0).plan is not None
+        req = PlanRequest(workload=w, algorithm="flash")
+        del req.t_start
+        plan = srv.cache.lookup(traffic_fingerprint(w, "flash"))
+        with pytest.raises(AttributeError):
+            srv._answer(req, plan, "hits", exact=True)
+
+
+def test_submitted_latency_measured_from_submit():
+    with PlanServer(workers=1, prewarm=False) as srv:
+        srv.submit(_w()).result(timeout=30.0)
+        snap = srv.telemetry_snapshot()
+    lat = snap["latency"]
+    assert lat, "telemetry must record a latency sample"
+    tier = next(iter(lat.values()))
+    assert tier["count"] >= 1
+    assert tier["max_us"] < 60e6  # a genuine measurement, not garbage

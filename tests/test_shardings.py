@@ -1,12 +1,5 @@
 """Sharding-rule unit tests (pure metadata, no devices needed... almost)."""
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
-from jax.sharding import PartitionSpec as P
-
-
 def test_param_specs_on_small_mesh(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp

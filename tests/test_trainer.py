@@ -4,7 +4,6 @@ end-to-end mini training run whose loss must decrease."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import smoke_config
 from repro.data import DataConfig, SyntheticLM

@@ -118,6 +118,17 @@ FAULT_RECOVERY_RATIO_MAX = 2.0  # issue-8 bar: served vs cold on the
                                 # degraded fabric; observed ~1.06
 FAULT_REREPAIRED_FLOOR = 1      # the event walk must re-repair something
 
+# Plan-exec device loop (fig14) acceptance bars.  Both rows are
+# CPU-interpret proxies (fake devices, XLA:CPU-emulated collectives, the
+# jnp pack path), so the ceilings are wide regression backstops: the
+# correctness gate is the parity flag, the numbers catch a plan lowering
+# that silently explodes into per-pair sends.
+E2E_PLAN_VS_DIRECT_MAX = 20.0  # measured plan/direct wall-clock ratio;
+                               # observed ~1.6 on fake CPU devices
+E2E_SIM_PRED_ERR_MAX = 10.0    # |measured-predicted|/predicted against
+                               # the simulator's flash/fanout ratio;
+                               # observed ~0.45 (no real DCN on CI)
+
 
 def check(path: str) -> int:
     with open(path) as f:
@@ -191,6 +202,7 @@ def check(path: str) -> int:
     status |= _check_synth_amortized(records)
     status |= _check_serving(records)
     status |= _check_fault(records)
+    status |= _check_e2e(records)
     return status
 
 
@@ -323,6 +335,48 @@ def _check_fault(records) -> int:
         status = 1
     else:
         print("ok   fault.stalls: 0 across the event window")
+    return status
+
+
+def _check_e2e(records) -> int:
+    """The e2e.* rows (fig14): the plan-exec measured-vs-simulated loop."""
+    status = 0
+    ratio = records.get("e2e.plan_vs_direct")
+    parity = (ratio or {}).get("derived", {}).get("parity")
+    if ratio is None:
+        print("FAIL e2e.plan_vs_direct: missing (benchmark renamed or "
+              "skipped?)")
+        status = 1
+    else:
+        if parity != "ok":
+            print(f"FAIL e2e.plan_vs_direct: device parity is {parity!r} "
+                  "(impl=\"plan\" must stay bit-identical to direct)")
+            status = 1
+        else:
+            print("ok   e2e.plan_vs_direct: device bit-parity holds")
+        value = float(ratio["us_per_call"])
+        if value > E2E_PLAN_VS_DIRECT_MAX:
+            print(f"FAIL e2e.plan_vs_direct: measured {value:.2f}x direct "
+                  f"(> {E2E_PLAN_VS_DIRECT_MAX:.0f}x backstop)")
+            status = 1
+        else:
+            print(f"ok   e2e.plan_vs_direct: {value:.2f}x "
+                  f"<= {E2E_PLAN_VS_DIRECT_MAX:.0f}x")
+    err = records.get("e2e.sim_pred_err")
+    if err is None:
+        print("FAIL e2e.sim_pred_err: missing (benchmark renamed or "
+              "skipped?)")
+        status = 1
+    else:
+        value = float(err["us_per_call"])
+        if value > E2E_SIM_PRED_ERR_MAX:
+            print(f"FAIL e2e.sim_pred_err: prediction error {value:.2f} "
+                  f"(> {E2E_SIM_PRED_ERR_MAX:.0f} backstop)")
+            status = 1
+        else:
+            print(f"ok   e2e.sim_pred_err: {value:.2f} "
+                  f"<= {E2E_SIM_PRED_ERR_MAX:.0f} "
+                  f"({err['derived_raw']})")
     return status
 
 

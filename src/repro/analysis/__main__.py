@@ -39,7 +39,7 @@ def main(argv=None) -> int:
         prog="python -m repro.analysis",
         description="Static concurrency & plan-IR analysis gate.")
     ap.add_argument("--astlint", action="store_true",
-                    help="run the AST rules over core/ and serving/")
+                    help="run the AST rules over core/, comm/ and serving/")
     ap.add_argument("--planlint", action="store_true",
                     help="verify a plan corpus (see --corpus)")
     ap.add_argument("--all", action="store_true",
@@ -67,8 +67,8 @@ def main(argv=None) -> int:
         }
         for f in findings:
             print(f.format())
-        print(f"astlint: {len(findings)} finding(s) over core/ and "
-              "serving/")
+        print(f"astlint: {len(findings)} finding(s) over core/, "
+              "comm/ and serving/")
         failed = failed or bool(findings)
 
     if run_plan:

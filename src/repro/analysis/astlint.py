@@ -26,12 +26,14 @@ enforce at runtime:
     exception object into an outer variable (the ``err = e`` respawn
     pattern).  Swallowing without any of those hides operational errors.
 
-  * **DET001** -- a nondeterminism source in ``core/``: ``time.time()``
-    (wall clock; ``perf_counter``/``monotonic`` are fine and intended)
-    or unseeded ``np.random`` access (anything except
+  * **DET001** -- a nondeterminism source in ``core/`` or ``comm/``:
+    ``time.time()`` (wall clock; ``perf_counter``/``monotonic`` are fine
+    and intended) or unseeded ``np.random`` access (anything except
     ``np.random.default_rng(seed)`` / ``np.random.Generator``).  Core
     synthesis must be a pure function of its inputs so plans replay
-    bit-identically.
+    bit-identically -- and the comm layer's plan lowering
+    (``comm/plan_exec.py``) bakes those plans into traced programs, so
+    the same determinism contract extends to it.
 
 Suppression: append ``# noqa: LCK001`` (or the relevant rule id, comma
 separated) to the offending line.  A bare ``# noqa`` silences every rule
@@ -366,14 +368,16 @@ def lint_source(source: str, path: str = "<string>", *,
 def lint_file(path: str, src_root: str) -> List[Finding]:
     module = _module_name(path, src_root)
     parts = module.split(".")
-    in_core = "core" in parts
-    in_scope = in_core or "serving" in parts
+    # DET001 (replay determinism) covers synthesis (core/) and the plan
+    # lowering that bakes plans into traced programs (comm/).
+    check_det = "core" in parts or "comm" in parts
+    in_scope = check_det or "serving" in parts
     if not in_scope:
         return []
     with open(path, "r") as f:
         source = f.read()
     return lint_source(source, path, module=module,
-                       check_lck001=True, check_det001=in_core)
+                       check_lck001=True, check_det001=check_det)
 
 
 def lint_paths(paths: Sequence[str], src_root: str) -> List[Finding]:
@@ -384,10 +388,10 @@ def lint_paths(paths: Sequence[str], src_root: str) -> List[Finding]:
 
 
 def lint_tree(src_root: str) -> List[Finding]:
-    """Lint every ``serving/`` and ``core/`` module under ``src_root``
-    (the directory containing the ``repro`` package)."""
+    """Lint every ``core/``, ``comm/`` and ``serving/`` module under
+    ``src_root`` (the directory containing the ``repro`` package)."""
     paths = []
-    for sub in ("repro/core", "repro/serving"):
+    for sub in ("repro/core", "repro/comm", "repro/serving"):
         d = os.path.join(src_root, sub)
         if not os.path.isdir(d):
             continue

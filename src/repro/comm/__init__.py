@@ -18,8 +18,14 @@ from .all_to_all import (
     rotation_all_to_all,
 )
 from .collectives import ef_compressed_psum, psum_bf16, tree_ef_state
+from .plan_exec import DeviceSchedule, is_lowered, lower_plan, \
+    plan_all_to_all
 
 __all__ = [
+    "DeviceSchedule",
+    "is_lowered",
+    "lower_plan",
+    "plan_all_to_all",
     "ALL_TO_ALL_IMPLS",
     "all_to_all_by_name",
     "available_all_to_all_impls",

@@ -73,6 +73,7 @@ def register_all_to_all_impl(name: str):
 
 
 def available_all_to_all_impls() -> list:
+    _ensure_extra_impls()
     return sorted(ALL_TO_ALL_IMPLS)
 
 
@@ -233,7 +234,15 @@ def rotation_all_to_all(x: jax.Array, axis: str) -> jax.Array:
     return out
 
 
+def _ensure_extra_impls() -> None:
+    """Import-on-demand registrations (plan_exec imports this module, so
+    it cannot be imported at module scope without a cycle)."""
+    if "plan" not in ALL_TO_ALL_IMPLS:
+        from . import plan_exec  # noqa: F401  (registers impl="plan")
+
+
 def all_to_all_by_name(name: str):
+    _ensure_extra_impls()
     try:
         return ALL_TO_ALL_IMPLS[name]
     except KeyError:
@@ -249,29 +258,39 @@ def resolve_all_to_all(
     ep_axes: Optional[Sequence[str]] = None,
     impl: str = "flash",
     topology=None,
+    plan=None,
 ) -> Optional[Callable[[jax.Array], jax.Array]]:
     """Select the jit-integrated A2A schedule for an EP-axis layout.
 
     The single dispatch point for model code, ``launch/`` and benchmarks
     (previously hand-rolled inside ``models/moe.py``).  Pass either a
     ``DistContext``-like object (attributes ``slow_axis``, ``ep_axes``,
-    ``a2a_impl``) or the raw keyword form.
+    ``a2a_impl``, optionally ``plan``) or the raw keyword form.
 
     Selection:
       * EP spans the slow axis plus fast axes -> the registered two-tier
-        impl ``impl`` (flash | direct | hierarchical | ...).
+        impl ``impl`` (flash | direct | hierarchical | plan | ...).
       * EP is exactly the slow axis -> the FLASH rotation schedule (every
         DCN link carries one contiguous chunk per stage, incast-free by
-        construction).
+        construction), or the plan-driven stage schedule when
+        ``impl="plan"``.
       * EP is fast-only -> a plain intra all_to_all over ICI.
       * No EP axes -> None (no exchange needed).
 
-    ``impl="auto"`` resolves from the fabric: on a heterogeneous or
-    oversubscribed ``Topology`` (core/topology.py) the FLASH schedule's
-    load-balance phase aligns per-rail shares with real link capacities, so
-    auto picks ``flash``; on a homogeneous full-bisection fabric (or with
-    no topology information) auto picks ``direct`` -- one fused collective,
-    no balancing needed when every link is equal.
+    ``impl="auto"`` resolves from what the caller knows: with a
+    synthesized ``plan`` (or ``ExecutableSchedule``) supplied, auto picks
+    ``"plan"`` -- the schedule already encodes the traffic *and* the
+    fabric.  Otherwise it resolves from the fabric alone: on a
+    heterogeneous or oversubscribed ``Topology`` (core/topology.py) the
+    FLASH schedule's load-balance phase aligns per-rail shares with real
+    link capacities, so auto picks ``flash``; on a homogeneous
+    full-bisection fabric (or with no topology information) auto picks
+    ``direct`` -- one fused collective, no balancing needed when every
+    link is equal.
+
+    ``impl="plan"`` (explicit or via auto) closes the returned callable
+    over ``plan``; the per-fingerprint lowering happens in
+    ``comm.plan_exec`` at trace time.
 
     Returns a unary ``buf -> buf`` callable, or None.
     """
@@ -280,12 +299,22 @@ def resolve_all_to_all(
         ep_axes = dist.ep_axes
         impl = dist.a2a_impl
         topology = getattr(dist, "topology", topology)
+        plan = getattr(dist, "plan", plan)
     if impl == "auto":
-        hetero = topology is not None and not topology.is_homogeneous
-        impl = "flash" if hetero else "direct"
+        if plan is not None:
+            impl = "plan"
+        else:
+            hetero = topology is not None and not topology.is_homogeneous
+            impl = "flash" if hetero else "direct"
     # Fail fast on unknown impl names on every path, including the
     # rotation/ICI-only ones that do not dispatch through the registry.
     two_tier = all_to_all_by_name(impl)
+    if impl == "plan":
+        if plan is None:
+            raise ValueError(
+                'impl="plan" needs a synthesized plan/schedule: pass '
+                "plan= (or set DistContext.plan)")
+        two_tier = partial(two_tier, plan=plan)
     ep = tuple(ep_axes or ())
     if not ep:
         return None
@@ -293,5 +322,8 @@ def resolve_all_to_all(
         fast = tuple(a for a in ep if a != slow_axis)
         return partial(two_tier, slow_axis=slow_axis, fast_axes=fast)
     if ep == (slow_axis,):
+        if impl == "plan":
+            # slow-axis-only EP still follows the plan's stage order.
+            return partial(two_tier, slow_axis=slow_axis, fast_axes=())
         return partial(rotation_all_to_all, axis=slow_axis)
     return partial(intra_all_to_all, fast_axes=ep)

@@ -521,6 +521,23 @@ class Plan:
             memo[key] = sched
         return sched
 
+    def iter_perm_stages(self):
+        """Every inter-server permutation in execution order, as tuples.
+
+        The device-lowering view consumed by ``comm.plan_exec.lower_plan``:
+        ``perm[i]`` is server ``i``'s send target this stage (-1 = idle).
+        Only PermutationStage / PermutationBlock phases carry an explicit
+        static permutation; other stage kinds (FanOutBurst, RailStage,
+        BoundStage) yield nothing here and are covered by the lowering's
+        fallback rotations instead.
+        """
+        for p in self.phases:
+            if isinstance(p, PermutationStage):
+                yield tuple(int(j) for j in p.perm)
+            elif isinstance(p, PermutationBlock):
+                for row in p.perms:
+                    yield tuple(int(j) for j in row)
+
     @property
     def stages(self) -> Tuple[PhaseBase, ...]:
         """The inter-server stage phases, in execution order."""

@@ -445,6 +445,17 @@ class ExecutableSchedule:
             memory_bytes=2.0 * total_bytes + plan.extra_memory_bytes,
         )
 
+    def lower_device(self, n_pods: Optional[int] = None):
+        """The device lowering of this schedule's plan (a DeviceSchedule).
+
+        Bridges to ``comm.plan_exec.lower_plan`` -- lazily, so the
+        host-only core keeps importing without jax.  Memoized on the plan
+        per pod count, like ``Plan.compile`` per topology fingerprint.
+        """
+        from ..comm.plan_exec import lower_plan
+
+        return lower_plan(self.plan, n_pods=n_pods)
+
     def _check_workload(self, w: Workload) -> None:
         if (w.cluster.n_servers, w.cluster.m_gpus) != (
                 self.plan.cluster.n_servers, self.plan.cluster.m_gpus):

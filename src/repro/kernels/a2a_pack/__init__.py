@@ -1,3 +1,3 @@
-from .ops import a2a_pack_op, a2a_pack_ref
+from .ops import a2a_pack_op, a2a_pack_ref, a2a_unpack_op, a2a_unpack_ref
 
-__all__ = ["a2a_pack_op", "a2a_pack_ref"]
+__all__ = ["a2a_pack_op", "a2a_pack_ref", "a2a_unpack_op", "a2a_unpack_ref"]

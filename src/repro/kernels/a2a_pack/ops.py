@@ -1,4 +1,4 @@
-"""jit'd public wrapper for a2a_pack."""
+"""jit'd public wrappers for a2a_pack / a2a_unpack."""
 
 from __future__ import annotations
 
@@ -6,12 +6,21 @@ from functools import partial
 
 import jax
 
-from .a2a_pack import a2a_pack
-from .ref import a2a_pack_ref
+from .a2a_pack import a2a_pack, a2a_unpack
+from .ref import a2a_pack_ref, a2a_unpack_ref
 
-__all__ = ["a2a_pack_op", "a2a_pack_ref"]
+__all__ = ["a2a_pack_op", "a2a_pack_ref", "a2a_unpack_op", "a2a_unpack_ref"]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def a2a_pack_op(x, idx, *, interpret: bool = False) -> jax.Array:
-    return a2a_pack(x, idx, interpret=interpret)
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def a2a_pack_op(x, idx, *, block_rows: int = 1,
+                interpret: bool = False) -> jax.Array:
+    return a2a_pack(x, idx, block_rows=block_rows, interpret=interpret)
+
+
+@partial(jax.jit,
+         static_argnames=("n_out_blocks", "block_rows", "interpret"))
+def a2a_unpack_op(x, idx, *, n_out_blocks: int = 0, block_rows: int = 1,
+                  interpret: bool = False) -> jax.Array:
+    return a2a_unpack(x, idx, n_out_blocks=n_out_blocks,
+                      block_rows=block_rows, interpret=interpret)

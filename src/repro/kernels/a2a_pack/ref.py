@@ -1,10 +1,24 @@
-"""Pure-jnp oracle for a2a_pack."""
+"""Pure-jnp oracles for a2a_pack / a2a_unpack."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def a2a_pack_ref(x, idx):
-    """out[m] = x[idx[m]]."""
-    return jnp.take(x, idx, axis=0)
+def a2a_pack_ref(x, idx, block_rows: int = 1):
+    """out block m = x block idx[m] (block_rows=1: out[m] = x[idx[m]])."""
+    if block_rows == 1:
+        return jnp.take(x, idx, axis=0)
+    n, d = x.shape
+    blocks = x.reshape(n // block_rows, block_rows, d)
+    return jnp.take(blocks, idx, axis=0).reshape(-1, d)
+
+
+def a2a_unpack_ref(x, idx, n_out_blocks: int = 0, block_rows: int = 1):
+    """out block idx[m] = x block m; unnamed output blocks are zero."""
+    m = idx.shape[0]
+    d = x.shape[-1]
+    n_out = max(m, n_out_blocks)
+    blocks = x.reshape(m, block_rows, d)
+    out = jnp.zeros((n_out, block_rows, d), x.dtype)
+    return out.at[idx].set(blocks).reshape(-1, d)

@@ -39,15 +39,18 @@ def serve_state_shapes(cfg: ModelConfig, mesh: Optional[Mesh],
 
 
 def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
-                    a2a_impl: Optional[str] = None):
+                    a2a_impl: Optional[str] = None, plan=None):
     """jit'd (params, cache, tokens [B], pos) -> (logits [B, V], cache).
 
     ``a2a_impl`` selects the MoE dispatch schedule through the comm-layer
-    registry (flash | direct | hierarchical), defaulting to the config's.
+    registry (flash | direct | hierarchical | plan), defaulting to the
+    config's.  ``plan`` is the synthesized Plan/ExecutableSchedule that
+    backs ``"plan"`` (and that ``"auto"`` prefers); pair with
+    ``serving.PlanClient.get_device_schedule`` for the daemon handoff.
     """
     model = build_model(cfg)
-    dist = make_dist_context(cfg, mesh, a2a_impl) if mesh is not None \
-        else None
+    dist = make_dist_context(cfg, mesh, a2a_impl, plan=plan) \
+        if mesh is not None else None
     rules = make_rules(cfg, mesh) if mesh is not None else None
 
     def serve_step(params, cache, tokens, pos):
@@ -60,11 +63,11 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh],
 
 
 def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh],
-                      a2a_impl: Optional[str] = None):
+                      a2a_impl: Optional[str] = None, plan=None):
     """jit'd (params, batch) -> (logits, cache | aux)."""
     model = build_model(cfg)
-    dist = make_dist_context(cfg, mesh, a2a_impl) if mesh is not None \
-        else None
+    dist = make_dist_context(cfg, mesh, a2a_impl, plan=plan) \
+        if mesh is not None else None
     rules = make_rules(cfg, mesh) if mesh is not None else None
 
     def prefill_step(params, batch):
@@ -103,6 +106,10 @@ def _plan_dispatch_schedules(gen_len: int, use_plan_server: bool) -> None:
         with PlanServer(workers=2) as srv:
             client = PlanClient(srv, algorithm="flash")
             results = client.simulate_many(traj)
+            # Device handoff: each distinct signature's plan comes back
+            # with its lowered stage tables; repeats reuse the memoized
+            # lowering (counters["lowered"] counts only the cache misses).
+            scheds = [client.get_device_schedule(w)[1] for w in traj]
             srv.drain(10.0)
             stats = srv.telemetry_snapshot()
         counters = stats["counters"]
@@ -110,6 +117,11 @@ def _plan_dispatch_schedules(gen_len: int, use_plan_server: bool) -> None:
                  f"warm={counters.get('warm', 0)} "
                  f"cold={counters.get('cold', 0)} "
                  f"upgrades={counters.get('upgrades', 0)}")
+        n_stages = sorted({s.n_stages for s in scheds})
+        print(f"device handoff: {len(scheds)} schedules, "
+              f"{client.counters['lowered']} lowered "
+              f"({len(scheds) - client.counters['lowered']} memoized); "
+              f"stage counts {n_stages}")
     else:
         cache = PlanCache(capacity=256, warm_start=True)
         results = simulate_many(traj, "flash", cache=cache)

@@ -44,8 +44,13 @@ class TrainOptions:
 
 
 def make_dist_context(cfg: ModelConfig, mesh: Mesh,
-                      a2a_impl: Optional[str] = None) -> DistContext:
+                      a2a_impl: Optional[str] = None,
+                      plan=None) -> DistContext:
     """Build the DistContext; ``a2a_impl`` overrides the config's choice.
+
+    ``plan`` (a core.plan.Plan or simulator.ExecutableSchedule) backs
+    ``a2a_impl="plan"`` and is preferred by ``"auto"``; it rides along in
+    the context so model code never threads it explicitly.
 
     The implementation name is validated against the one comm-layer
     registry (comm.all_to_all) so every entry point -- training, serving,
@@ -54,13 +59,18 @@ def make_dist_context(cfg: ModelConfig, mesh: Mesh,
     from ..comm.all_to_all import all_to_all_by_name
 
     impl = a2a_impl or cfg.a2a_impl
-    all_to_all_by_name(impl)  # raises ValueError on unknown impls
+    if impl != "auto":
+        all_to_all_by_name(impl)  # raises ValueError on unknown impls
+    if impl == "plan" and plan is None:
+        raise ValueError('a2a_impl="plan" needs a synthesized plan; pass '
+                         "plan= (e.g. from serving.client.PlanClient)")
     return DistContext(
         mesh=mesh,
         dp_axes=dp_axes(mesh),
         slow_axis=slow_axis(mesh),
         ep_axes=choose_ep_axes(cfg, mesh),
         a2a_impl=impl,
+        plan=plan,
     )
 
 

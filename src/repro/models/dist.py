@@ -31,6 +31,10 @@ class DistContext:
     # (flash on heterogeneous or oversubscribed fabrics, direct on uniform
     # full-bisection ones).
     topology: Optional[Topology] = None
+    # Synthesized schedule (core.plan.Plan or simulator.ExecutableSchedule)
+    # backing a2a_impl="plan"; "auto" prefers "plan" whenever this is set.
+    # Any object, so core stays import-light here; comm.plan_exec duck-types.
+    plan: Optional[object] = None
 
     @property
     def ep_size(self) -> int:

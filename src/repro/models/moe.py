@@ -4,8 +4,8 @@ The MoE block is where the paper's All-to-All appears in a real model: top-k
 routing produces a token->expert traffic matrix that changes every step
 (paper Fig 4), and dispatch/combine are All-to-All collectives over the EP
 mesh axes.  When the EP axes include the slow ``pod`` axis, dispatch crosses
-DCN and the configured ``a2a_impl`` (flash | direct | hierarchical) decides
-the schedule -- the jit-integrated analogue of swapping RCCL's fanout for
+DCN and the configured ``a2a_impl`` (flash | direct | hierarchical | plan)
+decides the schedule -- the jit-integrated analogue of swapping RCCL's fanout for
 FLASH in Megatron-LM (paper section 5).  Implementation selection happens
 in ``comm.all_to_all.resolve_all_to_all`` (one registry for model code,
 launch/ and benchmarks), never inline here.
@@ -208,7 +208,8 @@ def _moe_pod_ep(cfg: ModelConfig, dist: DistContext, p: dict, x: jax.Array):
         """
         a2a = resolve_all_to_all(
             slow_axis=ep_axis if exchange_slow else None,
-            ep_axes=(ep_axis,), impl=dist.a2a_impl)
+            ep_axes=(ep_axis,), impl=dist.a2a_impl,
+            plan=dist.plan if exchange_slow else None)
 
         if not (cfg.quantized_dispatch and exchange_slow):
             return a2a(buf)
@@ -243,12 +244,14 @@ def _moe_pod_ep(cfg: ModelConfig, dist: DistContext, p: dict, x: jax.Array):
         return out.reshape(bl, sk // k, d)
 
     dp_spec = dp if len(dp) > 1 else dp[0]
+    # check_vma=False: impl="plan" packs slots with a pallas kernel, which
+    # has no replication rule under shard_map's checker.
     f1 = jax.shard_map(
         island1, mesh=mesh,
         in_specs=(P(dp_spec, None, None), P()),
         out_specs=(P(dp_spec, None, None, None), P(dp_spec, None),
                    P(dp_spec, None), P(dp_spec, None), P()),
-        axis_names=set(dp))
+        axis_names=set(dp), check_vma=False)
     tokens_g, slot, keep, gates, aux = f1(x, p["router"])
 
     # auto-world grouped FFN: experts sharded over the slow axis, ff over TP
@@ -303,7 +306,7 @@ def _moe_pod_ep(cfg: ModelConfig, dist: DistContext, p: dict, x: jax.Array):
         in_specs=(P(dp_spec, None, None, None), P(dp_spec, None),
                   P(dp_spec, None), P(dp_spec, None)),
         out_specs=P(dp_spec, None, None),
-        axis_names=set(dp))
+        axis_names=set(dp), check_vma=False)
     out = f2(y, slot, keep, gates)
     return out, aux
 
@@ -355,5 +358,6 @@ def moe_apply(
         ),
         out_specs=(P(dp, None, None), P()),
         axis_names=set(dp),               # "model" stays auto inside
+        check_vma=False,                  # pallas pack under impl="plan"
     )
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])

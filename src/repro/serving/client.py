@@ -87,7 +87,7 @@ class PlanClient:
         self._sleep = sleep
         self.counters: Dict[str, int] = {
             "requests": 0, "hit": 0, "warm": 0, "cold": 0, "inline": 0,
-            "coalesced": 0, "retries": 0}
+            "coalesced": 0, "retries": 0, "lowered": 0}
 
     # -- retry plumbing ----------------------------------------------------
 
@@ -160,6 +160,24 @@ class PlanClient:
         return PlanAnswer(plan=plan, source="inline", exact=True,
                           latency_s=time.perf_counter() - t0,
                           request_id=-1, tier=self.tier)
+
+    def get_device_schedule(self, w: Workload, *,
+                            n_pods: Optional[int] = None):
+        """A served plan *plus* its device lowering, as ``(answer, sched)``.
+
+        The handoff that closes the serving loop: clients that execute the
+        exchange on device (``comm.plan_exec.plan_all_to_all``) need the
+        lowered stage tables, not just the Plan.  The lowering is memoized
+        on the plan object itself, so a daemon cache hit hands back the
+        already-lowered schedule for free; ``counters["lowered"]`` tallies
+        only the requests that actually ran the lowering (cache misses).
+        """
+        from ..comm.plan_exec import is_lowered, lower_plan
+
+        answer = self.get_plan(w)
+        if not is_lowered(answer.plan, n_pods=n_pods):
+            self.counters["lowered"] += 1
+        return answer, lower_plan(answer.plan, n_pods=n_pods)
 
     def simulate(self, w: Workload) -> SimResult:
         """Inline-path-compatible simulate: plan via the daemon, then

@@ -201,6 +201,26 @@ def test_repo_tree_clean():
     assert findings == [], "\n".join(f.format() for f in findings)
 
 
+def test_comm_in_scope_with_det001():
+    """comm/ rides the DET001 determinism contract: the plan lowering
+    (comm/plan_exec.py) bakes plans into traced programs, so wall-clock /
+    unseeded-random use there is as replay-hostile as in core/."""
+    import os
+
+    path = os.path.join(SRC_ROOT, "repro", "comm", "plan_exec.py")
+    # in scope and clean as shipped
+    assert astlint.lint_file(path, SRC_ROOT) == []
+    # DET001 actually armed for a comm module path
+    dirty = "import time\nt = time.time()\n"
+    findings = astlint.lint_source(
+        dirty, path=path, module="repro.comm.plan_exec",
+        check_det001=True)
+    assert [f.rule for f in findings] == ["DET001"]
+    # models/ (for example) stays out of scope
+    other = os.path.join(SRC_ROOT, "repro", "models", "moe.py")
+    assert astlint.lint_file(other, SRC_ROOT) == []
+
+
 # -- planlint -------------------------------------------------------------
 
 C = ClusterSpec(4, 2)

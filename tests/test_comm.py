@@ -90,3 +90,165 @@ assert rel_mean < 0.012, rel_mean
 print("EF_OK")
 """)
     assert "EF_OK" in out
+
+
+def test_plan_all_to_all_bit_identity(subproc):
+    """impl="plan" == direct on every routed-token exchange: 2-pod and
+    4-pod meshes, moe/skewed/random matrices, pallas-kernel and jnp
+    paths (the tentpole acceptance golden)."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.comm import direct_all_to_all, plan_all_to_all
+from repro.core.schedulers import get_scheduler
+from repro.core.traffic import ClusterSpec, Workload, moe_workload, \\
+    skewed_workload
+from repro.launch.mesh import make_mesh
+
+def rand_w(n_servers, m_gpus, seed):
+    n = n_servers * m_gpus
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(1, 50, size=(n, n)).astype(float)
+    np.fill_diagonal(mat, 0)
+    return Workload(ClusterSpec(n_servers, m_gpus), mat)
+
+cases = [
+    (2, 4, moe_workload(ClusterSpec(2, 4), 256, 2, seed=0), "flash"),
+    (2, 4, skewed_workload(ClusterSpec(2, 4), 1e6, seed=1), "flash"),
+    (4, 2, moe_workload(ClusterSpec(4, 2), 256, 2, seed=2), "flash"),
+    (4, 2, rand_w(4, 2, 3), "fanout"),
+]
+rng = np.random.default_rng(42)
+for pods, gpp, w, algo in cases:
+    mesh = make_mesh((pods, gpp), ("pod", "data"))
+    plan = get_scheduler(algo).synthesize(w)
+    n = pods * gpp
+    x = jnp.asarray(rng.normal(size=(n * n, 3, 8)).astype(np.float32))
+    spec = P(("pod", "data"))
+    for use_kernel in (True, False):
+        f_plan = jax.shard_map(
+            partial(plan_all_to_all, slow_axis="pod", fast_axes=("data",),
+                    plan=plan, use_kernel=use_kernel),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        f_dir = jax.shard_map(
+            partial(direct_all_to_all, slow_axis="pod",
+                    fast_axes=("data",)),
+            mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
+        a = np.asarray(jax.jit(f_plan)(x))
+        b = np.asarray(jax.jit(f_dir)(x))
+        assert np.array_equal(a, b), \\
+            f"plan != direct: pods={pods} {algo} kernel={use_kernel}"
+print("PLAN_GOLDEN_OK")
+""")
+    assert "PLAN_GOLDEN_OK" in out
+
+
+def test_plan_all_to_all_slow_only(subproc):
+    """Slow-axis-only EP (no fast axes): the plan path replaces the
+    rotation schedule and still matches it bit for bit."""
+    out = subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from functools import partial
+from repro.comm import plan_all_to_all, rotation_all_to_all
+from repro.core.schedulers import get_scheduler
+from repro.core.traffic import ClusterSpec, moe_workload
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((4, 2), ("pod", "model"))
+w = moe_workload(ClusterSpec(4, 1), 256, 2, seed=5)
+plan = get_scheduler("flash").synthesize(w)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(16, 6)).astype(np.float32))
+f_plan = jax.shard_map(
+    partial(plan_all_to_all, slow_axis="pod", fast_axes=(), plan=plan),
+    mesh=mesh, in_specs=P("pod"), out_specs=P("pod"), check_vma=False)
+f_rot = jax.shard_map(
+    partial(rotation_all_to_all, axis="pod"),
+    mesh=mesh, in_specs=P("pod"), out_specs=P("pod"), check_vma=False)
+a = np.asarray(jax.jit(f_plan)(x))
+b = np.asarray(jax.jit(f_rot)(x))
+assert np.array_equal(a, b)
+print("PLAN_SLOW_ONLY_OK")
+""")
+    assert "PLAN_SLOW_ONLY_OK" in out
+
+
+def test_resolve_auto_prefers_plan():
+    """impl="auto" resolution across homo/hetero topologies with and
+    without a plan: a supplied plan wins everywhere; otherwise the fabric
+    decides (flash on hetero, direct on homo/unknown)."""
+    from repro.comm.all_to_all import (
+        direct_all_to_all,
+        flash_all_to_all,
+        resolve_all_to_all,
+    )
+    from repro.comm.plan_exec import plan_all_to_all
+    from repro.core.schedulers import get_scheduler
+    from repro.core.topology import Topology
+
+    w = _mk_workload(4, 2)
+    plan = get_scheduler("flash").synthesize(w)
+    homo = Topology.from_cluster(w.cluster)
+    het = homo.degrade_nic(0, 0, 0.5)
+    for topo in (None, homo, het):
+        got = resolve_all_to_all(slow_axis="pod", ep_axes=("pod", "data"),
+                                 impl="auto", topology=topo, plan=plan)
+        assert got.func is plan_all_to_all
+        assert got.keywords["plan"] is plan
+    assert resolve_all_to_all(
+        slow_axis="pod", ep_axes=("pod", "data"), impl="auto",
+        topology=het).func is flash_all_to_all
+    assert resolve_all_to_all(
+        slow_axis="pod", ep_axes=("pod", "data"), impl="auto",
+        topology=homo).func is direct_all_to_all
+    # slow-only EP: plan replaces the rotation schedule
+    rot = resolve_all_to_all(slow_axis="pod", ep_axes=("pod",),
+                             impl="auto", plan=plan)
+    assert rot.func is plan_all_to_all
+    assert rot.keywords["fast_axes"] == ()
+
+
+def test_resolve_plan_impl_requires_plan():
+    import pytest
+
+    from repro.comm.all_to_all import resolve_all_to_all
+
+    with pytest.raises(ValueError, match="needs a synthesized plan"):
+        resolve_all_to_all(slow_axis="pod", ep_axes=("pod", "data"),
+                           impl="plan")
+
+
+def test_resolve_dist_context_plan_path():
+    """The DistContext attribute path threads .plan through to the
+    closed-over impl (what models/moe.py relies on)."""
+    from repro.comm.all_to_all import resolve_all_to_all
+    from repro.comm.plan_exec import plan_all_to_all
+    from repro.core.schedulers import get_scheduler
+
+    plan = get_scheduler("flash").synthesize(_mk_workload(2, 4))
+
+    class _Dist:
+        slow_axis = "pod"
+        ep_axes = ("pod", "data")
+        a2a_impl = "auto"
+        topology = None
+        plan_attr = None
+
+    _Dist.plan = plan
+    got = resolve_all_to_all(_Dist())
+    assert got.func is plan_all_to_all
+    assert got.keywords["plan"] is plan
+
+
+def _mk_workload(n_servers, m_gpus, seed=0):
+    import numpy as np
+
+    from repro.core.traffic import ClusterSpec, Workload
+
+    n = n_servers * m_gpus
+    rng = np.random.default_rng(seed)
+    mat = rng.integers(1, 50, size=(n, n)).astype(float)
+    np.fill_diagonal(mat, 0)
+    return Workload(ClusterSpec(n_servers, m_gpus), mat)

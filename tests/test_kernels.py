@@ -10,7 +10,8 @@ try:
 except ModuleNotFoundError:  # optional dev dep: skip property-based tests
     from _hypothesis_fallback import given, settings, st
 
-from repro.kernels.a2a_pack import a2a_pack_op, a2a_pack_ref
+from repro.kernels.a2a_pack import a2a_pack_op, a2a_pack_ref, \
+    a2a_unpack_op, a2a_unpack_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention_op
 from repro.kernels.grouped_matmul import grouped_matmul_op, grouped_matmul_ref
 
@@ -90,3 +91,79 @@ def test_a2a_pack_moe_layout():
     assert jnp.array_equal(packed, x[order])
     # destination-contiguity: dst of packed rows is non-decreasing
     assert bool(jnp.all(jnp.diff(dst[order]) >= 0))
+
+
+@pytest.mark.parametrize("d", [5, 64, 130, 200, 256])
+def test_a2a_pack_non_tile_lanes(d):
+    """D need not divide the 128-lane tile: pad-and-slice inside the op."""
+    n, m = 16, 9
+    key = jax.random.PRNGKey(d)
+    x = jax.random.normal(key, (n, d), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, n)
+    y = a2a_pack_op(x, idx, interpret=True)
+    assert jnp.array_equal(y, a2a_pack_ref(x, idx))
+
+
+@pytest.mark.parametrize("block_rows", [1, 3, 8, 16, 24])
+@pytest.mark.parametrize("d", [128, 72])
+def test_a2a_pack_block_rows(block_rows, d):
+    """Row blocks beyond 1: out block m = in block idx[m], any block size
+    (8-row sublane tiling kicks in for multiples of 8)."""
+    n_blocks, m = 6, 10
+    key = jax.random.PRNGKey(block_rows * d)
+    x = jax.random.normal(key, (n_blocks * block_rows, d), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, n_blocks)
+    y = a2a_pack_op(x, idx, block_rows=block_rows, interpret=True)
+    assert jnp.array_equal(y, a2a_pack_ref(x, idx, block_rows=block_rows))
+
+
+@pytest.mark.parametrize("block_rows", [1, 8, 24])
+@pytest.mark.parametrize("d", [128, 130])
+def test_a2a_unpack_matches_ref(block_rows, d):
+    """Inverse scatter: out block idx[m] <- in block m.  Blocks never
+    named by idx are unspecified, so parity is checked on named blocks
+    only (the plan-exec caller slices its trash block off the same way)."""
+    n_out, m = 8, 5
+    key = jax.random.PRNGKey(3 * block_rows + d)
+    x = jax.random.normal(key, (m * block_rows, d), jnp.float32)
+    perm = jax.random.permutation(jax.random.fold_in(key, 1), n_out)
+    idx = perm[:m].astype(jnp.int32)
+    y = a2a_unpack_op(x, idx, n_out_blocks=n_out, block_rows=block_rows,
+                      interpret=True)
+    ref = a2a_unpack_ref(x, idx, n_out_blocks=n_out, block_rows=block_rows)
+    named = np.asarray(
+        y.reshape(n_out, block_rows, d))[np.asarray(idx)]
+    named_ref = np.asarray(
+        ref.reshape(n_out, block_rows, d))[np.asarray(idx)]
+    assert np.array_equal(named, named_ref)
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_a2a_pack_unpack_round_trip(block_rows, seed):
+    """unpack(pack(x, perm), perm) == x for any permutation of blocks."""
+    n_blocks, d = 7, 128
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n_blocks * block_rows, d), jnp.float32)
+    perm = jax.random.permutation(
+        jax.random.fold_in(key, 1), n_blocks).astype(jnp.int32)
+    packed = a2a_pack_op(x, perm, block_rows=block_rows, interpret=True)
+    back = a2a_unpack_op(packed, perm, n_out_blocks=n_blocks,
+                         block_rows=block_rows, interpret=True)
+    assert jnp.array_equal(back, x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 12), st.integers(1, 180),
+       st.integers(0, 2 ** 31 - 1))
+def test_a2a_pack_unpack_round_trip_property(n_blocks, block_rows, d, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n_blocks * block_rows, d), jnp.float32)
+    perm = jax.random.permutation(
+        jax.random.fold_in(key, 1), n_blocks).astype(jnp.int32)
+    packed = a2a_pack_op(x, perm, block_rows=block_rows, interpret=True)
+    assert jnp.array_equal(
+        packed, a2a_pack_ref(x, perm, block_rows=block_rows))
+    back = a2a_unpack_op(packed, perm, n_out_blocks=n_blocks,
+                         block_rows=block_rows, interpret=True)
+    assert jnp.array_equal(back, x)
